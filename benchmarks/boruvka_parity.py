@@ -1,0 +1,45 @@
+"""Ours — TPU-native priority-Borůvka engine vs the sequential oracle.
+
+Round-1 frontier must be EXACTLY the oracle's (neg-free Kruskal forest);
+full-run crowdsourced totals may differ slightly (current-components negative
+check; DESIGN.md §4) and final labels must be identical."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (NEG, POS, PerfectCrowd, UNKNOWN, boruvka_frontier,
+                        crowdsourced_join, get_order, label_parallel_jax,
+                        parallel_crowdsourced_pairs)
+
+from .common import dataset, row, timed
+
+
+def run() -> list:
+    import jax.numpy as jnp
+    out = []
+    for ds_name in ("paper", "product"):
+        ds = dataset(ds_name)
+        cand = ds.pairs.above(0.3)
+        perm = get_order(cand, "expected")
+        ordered = cand.take(perm)
+        with timed() as t:
+            oracle_sel = set(parallel_crowdsourced_pairs(
+                ordered, np.arange(len(ordered)), {}))
+            fr = boruvka_frontier(
+                jnp.asarray(ordered.u), jnp.asarray(ordered.v),
+                jnp.full(len(ordered), UNKNOWN, jnp.int32),
+                jnp.zeros(len(ordered), bool), ordered.n_objects)
+            jax_sel = set(np.nonzero(np.asarray(fr))[0].tolist())
+        truth = np.where(ordered.truth, POS, NEG).astype(np.int32)
+        labels, cs, rounds = label_parallel_jax(
+            ordered.u, ordered.v, ordered.n_objects,
+            lambda idx: truth[idx])
+        oracle = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                                   labeler="parallel")
+        out.append(row(
+            f"boruvka/{ds_name}", t["us"],
+            f"round1_exact={oracle_sel == jax_sel} "
+            f"labels_correct={bool((labels == truth).all())} "
+            f"jax_crowdsourced={int(cs.sum())} "
+            f"oracle_crowdsourced={oracle.n_crowdsourced} rounds={len(rounds)}"))
+    return out

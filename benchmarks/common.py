@@ -1,0 +1,29 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.data.entities import make_paper_dataset, make_product_dataset
+
+_CACHE = {}
+
+
+def dataset(name: str):
+    if name not in _CACHE:
+        _CACHE[name] = (make_paper_dataset() if name == "paper"
+                        else make_product_dataset())
+    return _CACHE[name]
+
+
+def row(name: str, us: float, derived: str) -> str:
+    """CSV row in the harness format: name,us_per_call,derived."""
+    return f"{name},{us:.1f},{derived}"
+
+
+@contextmanager
+def timed():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["us"] = (time.perf_counter() - t0) * 1e6

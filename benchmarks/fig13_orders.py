@@ -1,0 +1,31 @@
+"""Figure 13 — number of crowdsourced pairs per labeling order.
+
+Paper claims: Worst can need ~26x the Optimal's crowdsourced pairs (Cora at
+th=0.1); Expect (likelihood-descending) is close to Optimal; Random is far
+worse than Expect."""
+from __future__ import annotations
+
+from repro.core import PerfectCrowd, crowdsourced_join
+
+from .common import dataset, row, timed
+
+
+def run() -> list:
+    out = []
+    for ds_name in ("paper", "product"):
+        ds = dataset(ds_name)
+        for th in (0.3, 0.1):
+            cand = ds.pairs.above(th)
+            res = {}
+            with timed() as t:
+                for order in ("optimal", "expected", "random", "worst"):
+                    r = crowdsourced_join(cand, PerfectCrowd(), order=order,
+                                          labeler="sequential")
+                    res[order] = r.n_crowdsourced
+            ratio = res["worst"] / max(res["optimal"], 1)
+            out.append(row(
+                f"fig13/{ds_name}/th{th}", t["us"],
+                f"optimal={res['optimal']} expected={res['expected']} "
+                f"random={res['random']} worst={res['worst']} "
+                f"worst/optimal={ratio:.1f}x"))
+    return out

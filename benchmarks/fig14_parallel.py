@@ -1,0 +1,32 @@
+"""Figures 14/15 — parallel vs non-parallel labeling.
+
+Paper claims (th=0.3, Cora): Non-Parallel needs 1237 iterations (one pair per
+round-trip); Parallel needs 14, with a front-loaded first batch (908 pairs).
+Higher thresholds need fewer iterations (Fig. 15)."""
+from __future__ import annotations
+
+from repro.core import PerfectCrowd, crowdsourced_join
+
+from .common import dataset, row, timed
+
+
+def run() -> list:
+    out = []
+    for ds_name in ("paper", "product"):
+        ds = dataset(ds_name)
+        for th in (0.3, 0.4):
+            cand = ds.pairs.above(th)
+            with timed() as t:
+                par = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                                        labeler="parallel")
+                seq = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                                        labeler="sequential")
+            out.append(row(
+                f"fig14/{ds_name}/th{th}", t["us"],
+                f"non_parallel_iters={seq.n_crowdsourced} "
+                f"parallel_iters={par.n_iterations} "
+                f"batches={par.batch_sizes[:6]}... "
+                f"parallel_total={par.n_crowdsourced} "
+                f"seq_total={seq.n_crowdsourced} "
+                f"overhead={par.n_crowdsourced/max(seq.n_crowdsourced,1)-1:+.1%}"))
+    return out

@@ -1,0 +1,29 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (boruvka_parity, fig11_clusters, fig12_transitive,
+                   fig13_orders, fig14_parallel, fig16_optimizations,
+                   table1_latency, table2_quality)
+    mods = [fig11_clusters, fig12_transitive, fig13_orders, fig14_parallel,
+            fig16_optimizations, table1_latency, table2_quality,
+            boruvka_parity]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for m in mods:
+        name = m.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        for r in m.run():
+            print(r, flush=True)
+    print(f"# total {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .registry import ARCHS, ASSIGNED, get
+from .shapes import SHAPES, input_specs, shape_applicable

@@ -1,0 +1,138 @@
+"""Assigned input shapes and abstract ``input_specs`` per (arch, shape).
+
+  train_4k     seq_len=4096   global_batch=256   (training: train_step)
+  prefill_32k  seq_len=32768  global_batch=32    (inference prefill)
+  decode_32k   seq_len=32768  global_batch=128   (one-token decode over a
+                                                  32k KV cache: serve_step)
+  long_500k    seq_len=524288 global_batch=1     (long-context decode; only
+                                                  SSM/hybrid — see DESIGN.md)
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input (weak-type-correct, shardable, no device allocation).  Modality
+frontends are stubs: the VLM ships precomputed patch embeddings + M-RoPE
+position ids, the audio arch ships conditioning frame embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return "skipped(full-attention O(S^2) prefill; long_500k scoped to SSM/hybrid)"
+    return None
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _bf16(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def train_input_specs(cfg: ModelConfig, shape: Shape,
+                      batch_override: int = 0) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch pytree for loss_fn / train_step.  The total sequence (prefix stub
+    tokens + text/codec tokens) equals shape.seq_len."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    n_prefix = cfg.n_patch_tokens + cfg.n_cond_tokens
+    specs["tokens"] = _i32(B, S - n_prefix)
+    specs["targets"] = _i32(B, S)
+    if n_prefix:
+        specs["prefix_embeds"] = _bf16(B, n_prefix, cfg.d_model)
+    if cfg.mrope:
+        specs["positions3"] = _i32(B, S, 3)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: Shape,
+                        batch_override: int = 0) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    n_prefix = cfg.n_patch_tokens + cfg.n_cond_tokens
+    specs["tokens"] = _i32(B, S - n_prefix)
+    if n_prefix:
+        specs["prefix_embeds"] = _bf16(B, n_prefix, cfg.d_model)
+    if cfg.mrope:
+        specs["positions3"] = _i32(B, S, 3)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: Shape,
+                       batch_override: int = 0) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = batch_override or shape.global_batch
+    specs = {"tokens": _i32(B, 1)}
+    if cfg.mrope:
+        specs["positions3"] = _i32(B, 1, 3)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                batch_override: int = 0) -> Dict[str, jax.ShapeDtypeStruct]:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, batch_override)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape, batch_override)
+    return decode_input_specs(cfg, shape, batch_override)
+
+
+def dummy_batch(cfg: ModelConfig, seq_len: int, batch: int, kind: str,
+                seed: int = 0) -> Dict[str, jax.Array]:
+    """Concrete random batch matching the spec layout (smoke tests/examples).
+    The modality-frontend stub materializes here: random patch/frame
+    embeddings and (for M-RoPE) image-grid position ids."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_prefix = cfg.n_patch_tokens + cfg.n_cond_tokens
+    if kind == "decode":
+        return {"tokens": jax.random.randint(k1, (batch, 1), 0, cfg.vocab)}
+    tokens = jax.random.randint(k1, (batch, seq_len - n_prefix), 0, cfg.vocab)
+    out: Dict[str, jax.Array] = {"tokens": tokens}
+    if n_prefix:
+        out["prefix_embeds"] = (jax.random.normal(
+            k2, (batch, n_prefix, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.bfloat16)
+    if cfg.mrope:
+        # vision stub: patches on a sqrt grid (t=0), then text positions
+        side = max(int(cfg.n_patch_tokens ** 0.5), 1)
+        idx = jnp.arange(seq_len)
+        is_text = idx >= n_prefix
+        t = jnp.where(is_text, idx - n_prefix + side, 0)
+        h = jnp.where(is_text, idx - n_prefix + side, (idx // side))
+        w = jnp.where(is_text, idx - n_prefix + side, (idx % side))
+        pos3 = jnp.stack([t, h, w], axis=-1).astype(jnp.int32)
+        out["positions3"] = jnp.broadcast_to(pos3, (batch, seq_len, 3))
+    if kind == "train":
+        tgt = jax.random.randint(k3, (batch, seq_len), 0, cfg.vocab)
+        if n_prefix:
+            tgt = tgt.at[:, :n_prefix].set(-1)
+        out["targets"] = tgt
+    return out

@@ -1,0 +1,37 @@
+"""The paper's primary contribution: hybrid transitive-relations +
+crowdsourcing labeling framework (ClusterGraph deduction, labeling orders,
+parallel labeling) — exact sequential oracle plus the TPU-native JAX engine.
+"""
+from .cluster_graph import ClusterGraph, MATCH, NON_MATCH
+from .crowd import CostModel, Crowd, LatencyModel, NoisyCrowd, PerfectCrowd
+from .deduce import deduce_bruteforce
+from .jax_graph import (NEG, POS, UNKNOWN, boruvka_frontier,
+                        connected_components, deduce_batch, label_parallel_jax,
+                        neg_keys)
+from .join import JoinResult, crowdsourced_join
+from .labeling import (LabelingResult, label_all_crowdsourced,
+                       label_sequential)
+from .metrics import Quality, quality
+from .pairs import PairSet
+from .parallel import (StreamTrace, WallClock, deduction_sweep,
+                       label_parallel, parallel_crowdsourced_pairs,
+                       simulate_stream, simulate_wallclock_parallel_id,
+                       simulate_wallclock_sequential)
+from .sorting import (ORDERS, count_crowdsourced, expected_crowdsourced,
+                      get_order, order_expected, order_optimal, order_random,
+                      order_worst)
+
+__all__ = [
+    "ClusterGraph", "MATCH", "NON_MATCH", "PairSet",
+    "Crowd", "PerfectCrowd", "NoisyCrowd", "CostModel", "LatencyModel",
+    "deduce_bruteforce",
+    "label_sequential", "label_all_crowdsourced", "label_parallel",
+    "LabelingResult", "parallel_crowdsourced_pairs", "deduction_sweep",
+    "simulate_stream", "simulate_wallclock_parallel_id",
+    "simulate_wallclock_sequential", "StreamTrace", "WallClock",
+    "order_expected", "order_optimal", "order_random", "order_worst",
+    "get_order", "ORDERS", "count_crowdsourced", "expected_crowdsourced",
+    "connected_components", "deduce_batch", "neg_keys", "boruvka_frontier",
+    "label_parallel_jax", "UNKNOWN", "NEG", "POS",
+    "crowdsourced_join", "JoinResult", "quality", "Quality",
+]

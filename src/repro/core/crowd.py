@@ -1,0 +1,106 @@
+"""Crowd platform simulators (§2.1, §6.4).
+
+The paper assumes correct answers for the algorithmic sections (§2.1) and uses
+a real AMT deployment with 3-way majority vote, 20-pair HIT batching and
+qualification tests for §6.4.  We implement both regimes:
+
+* :class:`PerfectCrowd` — always returns ground truth (§2.1 assumption; also
+  what the paper "simulated" for the Table 1 latency comparison).
+* :class:`NoisyCrowd` — each of ``n_assignments`` workers flips the true label
+  with prob ``error_rate`` (reduced by a qualification-test pass rate), final
+  label by majority vote — the §6.4 deployment model.
+* :class:`LatencyModel` — lognormal per-assignment completion times over a
+  finite worker pool, used by the event-driven simulator for Table 1/2 wall
+  clock and Figure 16.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .cluster_graph import MATCH, NON_MATCH
+from .pairs import PairSet
+
+
+class Crowd:
+    """Interface: label pair index ``i`` of a PairSet."""
+
+    n_asked: int = 0
+
+    def ask(self, pairs: PairSet, i: int) -> str:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        self.n_asked = 0
+
+
+class PerfectCrowd(Crowd):
+    def ask(self, pairs: PairSet, i: int) -> str:
+        self.n_asked += 1
+        return pairs.truth_label(i)
+
+
+class NoisyCrowd(Crowd):
+    def __init__(self, error_rate: float = 0.05, n_assignments: int = 3,
+                 qualification: bool = True, seed: int = 0):
+        # qualification tests (§6.4) screen the worst workers: model as a
+        # multiplicative reduction of the base error rate.
+        self.error_rate = error_rate * (0.7 if qualification else 1.0)
+        self.n_assignments = n_assignments
+        self.rng = np.random.default_rng(seed)
+        self.n_asked = 0
+
+    def ask(self, pairs: PairSet, i: int) -> str:
+        self.n_asked += 1
+        true_match = bool(pairs.truth[i])
+        votes = self.rng.random(self.n_assignments) >= self.error_rate
+        # votes True = worker answers correctly
+        n_true = int(votes.sum())
+        maj_correct = n_true * 2 > self.n_assignments
+        match = true_match if maj_correct else not true_match
+        return MATCH if match else NON_MATCH
+
+    def pair_error_rate(self) -> float:
+        """Analytic majority-vote error for sanity checks."""
+        e, k = self.error_rate, self.n_assignments
+        return sum(
+            math.comb(k, j) * e**j * (1 - e) ** (k - j)
+            for j in range(k // 2 + 1, k + 1)
+        )
+
+
+@dataclasses.dataclass
+class CostModel:
+    """AMT accounting of §6.4: 2 cents/assignment, 20 pairs per HIT, 3
+    assignments per HIT."""
+
+    cents_per_assignment: float = 2.0
+    pairs_per_hit: int = 20
+    assignments_per_hit: int = 3
+
+    def n_hits(self, n_pairs: int) -> int:
+        return math.ceil(n_pairs / self.pairs_per_hit)
+
+    def cost_cents(self, n_pairs: int) -> float:
+        return self.n_hits(n_pairs) * self.assignments_per_hit * self.cents_per_assignment
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Per-assignment completion latency (minutes), lognormal; a worker pool
+    of ``n_workers`` draws available HIT-assignments (AMT assigns randomly)."""
+
+    n_workers: int = 20
+    mean_minutes: float = 30.0
+    sigma: float = 1.0
+    seed: int = 0
+
+    def sampler(self) -> "np.random.Generator":
+        return np.random.default_rng(self.seed)
+
+    def draw_minutes(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        mu = math.log(self.mean_minutes) - self.sigma**2 / 2
+        return rng.lognormal(mu, self.sigma, size=n)

@@ -1,0 +1,232 @@
+"""TPU-native transitive-relations engine (DESIGN.md §4).
+
+Vectorized, ``jit``-able re-formulation of the paper's ClusterGraph machinery
+so the deduction/selection inner loops run as dense array programs on an
+accelerator mesh instead of pointer-chasing union-find on a host:
+
+* ``connected_components`` — hook-and-compress (pointer jumping) over the
+  matching-edge list; O(log n) ``while_loop`` rounds of O(E) scatter/gather.
+* ``neg_keys`` + ``deduce_batch`` — cluster-level negative edges become a
+  sorted array of canonical ``lo * n + hi`` root-pair keys; "is there an edge
+  between cluster(o) and cluster(o')?" is a vectorized ``searchsorted``.
+* ``boruvka_frontier`` — the parallel re-formulation of Algorithm 3.  With
+  every unlabeled pair optimistically assumed matching, the sequential scan
+  selects exactly the **priority-Kruskal forest** of the candidate graph
+  (an edge is selected iff earlier-priority edges do not already connect its
+  endpoints, with negative-deduced pairs excluded).  By the MSF cut property
+  (priorities are distinct), every component's minimum-priority incident valid
+  edge belongs to that forest — so Borůvka rounds reproduce it in O(log n)
+  data-parallel steps.  Negative-edge exclusion is evaluated against *current*
+  components, which can only shrink the per-round frontier vs. the sequential
+  scan (never publishes a pair the oracle wouldn't); on neg-free instances the
+  selection is exactly equal (property-tested).
+
+All functions take fixed-shape arrays + validity masks so they stay jittable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# label encoding for the array engine
+UNKNOWN = -1
+NEG = 0
+POS = 1
+
+
+# ---------------------------------------------------------------------------
+# Connected components over matching edges: pointer jumping
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def connected_components(u: jax.Array, v: jax.Array, mask: jax.Array,
+                         n_objects: int) -> jax.Array:
+    """Roots (min vertex id per component) over edges where ``mask`` is True."""
+    parent0 = jnp.arange(n_objects, dtype=jnp.int32)
+    big = jnp.int32(n_objects)  # sentinel larger than any id
+    uu = jnp.where(mask, u, 0).astype(jnp.int32)
+    vv = jnp.where(mask, v, 0).astype(jnp.int32)
+
+    def body(state):
+        parent, _ = state
+        ru = parent[uu]
+        rv = parent[vv]
+        lo = jnp.minimum(ru, rv)
+        # hook: parent[max(ru,rv)] <- min(ru,rv) (scatter-min, masked)
+        hi = jnp.where(mask, jnp.maximum(ru, rv), big)
+        tgt = jnp.where(mask, lo, big)
+        parent = parent.at[hi.clip(0, n_objects - 1)].min(
+            jnp.where(hi < big, tgt, big)
+        )
+        parent = jnp.minimum(parent, parent0)  # sentinel guard
+        # compress: jump twice per round
+        parent = parent[parent]
+        parent = parent[parent]
+        changed = jnp.any(parent[uu] != parent[vv])
+        return parent, changed
+
+    def cond(state):
+        return state[1]
+
+    parent, _ = jax.lax.while_loop(cond, body, (parent0, jnp.bool_(True)))
+    # final full compression
+    def comp_body(p):
+        return p[p]
+    def comp_cond(p):
+        return jnp.any(p[p] != p)
+    parent = jax.lax.while_loop(comp_cond, comp_body, parent)
+    return parent
+
+
+def canonical_keys(roots_u: jax.Array, roots_v: jax.Array, n_objects: int) -> jax.Array:
+    # Keys are lo * n + hi.  Under the default jax config int64 silently
+    # narrows to int32, so guard the representable range; with
+    # ``jax_enable_x64`` (production) the full int64 range is available.
+    key_bits = 63 if jax.config.jax_enable_x64 else 31
+    if n_objects * n_objects >= 2**key_bits:
+        raise ValueError(
+            f"n_objects={n_objects} overflows {key_bits + 1}-bit pair keys; "
+            "enable jax_enable_x64 for large object universes"
+        )
+    kdt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    lo = jnp.minimum(roots_u, roots_v).astype(kdt)
+    hi = jnp.maximum(roots_u, roots_v).astype(kdt)
+    return lo * jnp.asarray(n_objects, kdt) + hi
+
+
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def neg_keys(roots: jax.Array, u: jax.Array, v: jax.Array, neg_mask: jax.Array,
+             n_objects: int) -> jax.Array:
+    """Sorted canonical keys of cluster pairs joined by a labeled neg edge.
+    Invalid slots are pushed to the end as int64 max-sentinels."""
+    keys = canonical_keys(roots[u], roots[v], n_objects)
+    sentinel = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
+    keys = jnp.where(neg_mask, keys, sentinel)
+    return jnp.sort(keys)
+
+
+def _in_sorted(sorted_keys: jax.Array, queries: jax.Array) -> jax.Array:
+    idx = jnp.searchsorted(sorted_keys, queries)
+    idx = idx.clip(0, sorted_keys.shape[0] - 1)
+    return sorted_keys[idx] == queries
+
+
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def deduce_batch(
+    roots: jax.Array,
+    sorted_neg: jax.Array,
+    qu: jax.Array,
+    qv: jax.Array,
+    n_objects: int,
+) -> jax.Array:
+    """Algorithm 1 vectorized: per query pair returns POS / NEG / UNKNOWN."""
+    ru, rv = roots[qu], roots[qv]
+    same = ru == rv
+    keys = canonical_keys(ru, rv, n_objects)
+    neg = _in_sorted(sorted_neg, keys) & ~same
+    return jnp.where(same, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Priority-Borůvka frontier (parallel Algorithm 3)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def boruvka_frontier(
+    u: jax.Array,          # (P,) int32
+    v: jax.Array,          # (P,) int32
+    labels: jax.Array,     # (P,) int32 in {UNKNOWN, NEG, POS}
+    published: jax.Array,  # (P,) bool — in-flight pairs (instant decision)
+    n_objects: int,
+) -> jax.Array:
+    """Returns a bool mask of pairs to crowdsource now.
+
+    Priorities are the array positions (the caller passes pairs already in
+    labeling order), so `i < j` means pair i precedes pair j in ω.
+    """
+    P = u.shape[0]
+    prio = jnp.arange(P, dtype=jnp.int32)
+    inf = jnp.int32(P)
+
+    # "selected" accumulates the optimistic matching forest:
+    # starts as the labeled-POS edges; published (in-flight) pairs are also
+    # assumed matching from the start (they are already guaranteed pairs).
+    selected0 = (labels == POS) | (published & (labels == UNKNOWN))
+    frontier0 = jnp.zeros((P,), dtype=bool)
+    undecided0 = (labels == UNKNOWN) & ~published
+
+    def round_body(state):
+        selected, frontier, undecided, _ = state
+        roots = connected_components(u, v, selected, n_objects)
+        sorted_neg = neg_keys(roots, u, v, labels == NEG, n_objects)
+        ru, rv = roots[u], roots[v]
+        keys = canonical_keys(ru, rv, n_objects)
+        neg_hit = _in_sorted(sorted_neg, keys)
+        # a candidate: undecided, endpoints in different clusters, no neg edge
+        cand = undecided & (ru != rv) & ~neg_hit
+        # pairs that became deducible drop out of contention permanently
+        undecided = undecided & cand
+        # each cluster's min-priority incident candidate edge is in the forest
+        p = jnp.where(cand, prio, inf)
+        best = jnp.full((n_objects,), inf, dtype=jnp.int32)
+        best = best.at[ru].min(p)
+        best = best.at[rv].min(p)
+        win = cand & ((best[ru] == prio) | (best[rv] == prio))
+        selected = selected | win
+        frontier = frontier | win
+        undecided = undecided & ~win
+        progress = jnp.any(win)
+        return selected, frontier, undecided, progress
+
+    def cond(state):
+        return state[3]
+
+    state = (selected0, frontier0, undecided0, jnp.bool_(True))
+    _, frontier, _, _ = jax.lax.while_loop(cond, round_body, state)
+    return frontier
+
+
+# ---------------------------------------------------------------------------
+# Full batch-parallel labeling loop (host-driven, device inner loops)
+# ---------------------------------------------------------------------------
+def label_parallel_jax(
+    u: np.ndarray,
+    v: np.ndarray,
+    n_objects: int,
+    crowd_fn,
+) -> Tuple[np.ndarray, np.ndarray, list]:
+    """Iterate: frontier -> crowd -> deduce, entirely with the array engine.
+
+    ``crowd_fn(idx_array) -> int32 array of {NEG, POS}`` labels the frontier.
+    Returns (labels, crowdsourced_mask, per-round frontier sizes).
+    """
+    P = len(u)
+    uj = jnp.asarray(u, jnp.int32)
+    vj = jnp.asarray(v, jnp.int32)
+    labels = jnp.full((P,), UNKNOWN, jnp.int32)
+    crowdsourced = np.zeros(P, dtype=bool)
+    published = jnp.zeros((P,), dtype=bool)
+    rounds = []
+    while bool(jnp.any(labels == UNKNOWN)):
+        frontier = boruvka_frontier(uj, vj, labels, published, n_objects)
+        idx = np.nonzero(np.asarray(frontier))[0]
+        if len(idx) == 0:
+            # everything left is deducible
+            roots = connected_components(uj, vj, labels == POS, n_objects)
+            sorted_neg = neg_keys(roots, uj, vj, labels == NEG, n_objects)
+            ded = deduce_batch(roots, sorted_neg, uj, vj, n_objects)
+            labels = jnp.where(labels == UNKNOWN, ded, labels)
+            assert not bool(jnp.any(labels == UNKNOWN)), "engine stuck"
+            break
+        rounds.append(len(idx))
+        crowdsourced[idx] = True
+        got = crowd_fn(idx)
+        labels = labels.at[jnp.asarray(idx)].set(jnp.asarray(got, jnp.int32))
+        # deduction sweep
+        roots = connected_components(uj, vj, labels == POS, n_objects)
+        sorted_neg = neg_keys(roots, uj, vj, labels == NEG, n_objects)
+        ded = deduce_batch(roots, sorted_neg, uj, vj, n_objects)
+        labels = jnp.where(labels == UNKNOWN, ded, labels)
+    return np.asarray(labels), crowdsourced, rounds

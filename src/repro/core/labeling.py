@@ -1,0 +1,75 @@
+"""Sequential labeling component (§3.2) — one pair at a time.
+
+Walks the sorted list; a pair whose label is deducible from the already
+labeled pairs (Algorithm 1 on the ClusterGraph) is deduced for free, otherwise
+it is crowdsourced.  Each crowdsourced pair is its own iteration/HIT round —
+the latency problem §5 fixes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .cluster_graph import ClusterGraph, MATCH, NON_MATCH
+from .crowd import Crowd
+from .pairs import PairSet
+
+
+@dataclasses.dataclass
+class LabelingResult:
+    labels: np.ndarray             # (P,) bool — final label per pair (True=M)
+    crowdsourced: np.ndarray       # (P,) bool — True iff pair was crowdsourced
+    n_iterations: int              # crowd round-trips
+    batch_sizes: List[int]         # pairs published per iteration
+    n_conflicts: int = 0
+
+    @property
+    def n_crowdsourced(self) -> int:
+        return int(self.crowdsourced.sum())
+
+    @property
+    def n_deduced(self) -> int:
+        return len(self.labels) - self.n_crowdsourced
+
+
+def label_sequential(pairs: PairSet, order: np.ndarray, crowd: Crowd) -> LabelingResult:
+    n = len(pairs)
+    labels = np.zeros(n, dtype=bool)
+    crowdsourced = np.zeros(n, dtype=bool)
+    g = ClusterGraph(pairs.n_objects)
+    for i in order:
+        i = int(i)
+        o, o2 = int(pairs.u[i]), int(pairs.v[i])
+        d = g.deduce(o, o2)
+        if d is None:
+            lab = crowd.ask(pairs, i)
+            crowdsourced[i] = True
+            g.add_label(o, o2, lab)
+        else:
+            lab = d
+        labels[i] = lab == MATCH
+    nc = int(crowdsourced.sum())
+    return LabelingResult(
+        labels=labels,
+        crowdsourced=crowdsourced,
+        n_iterations=nc,
+        batch_sizes=[1] * nc,
+        n_conflicts=g.n_conflicts,
+    )
+
+
+def label_all_crowdsourced(pairs: PairSet, crowd: Crowd) -> LabelingResult:
+    """The Non-Transitive baseline (§6.1): crowdsource every candidate pair,
+    publish all of them at once (one parallel round)."""
+    n = len(pairs)
+    labels = np.zeros(n, dtype=bool)
+    for i in range(n):
+        labels[i] = crowd.ask(pairs, i) == MATCH
+    return LabelingResult(
+        labels=labels,
+        crowdsourced=np.ones(n, dtype=bool),
+        n_iterations=1,
+        batch_sizes=[n],
+    )

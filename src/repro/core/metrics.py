@@ -1,0 +1,44 @@
+"""Result-quality metrics (§6.4): precision / recall / F-measure.
+
+The paper reports quality over the *join result*: precision over predicted
+matching pairs, recall against all true matching pairs of the dataset
+(including those the machine phase filtered out below the likelihood
+threshold — which is why even Non-Transitive recall tops out well below 100%
+on Product in Table 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .pairs import PairSet
+
+
+@dataclasses.dataclass
+class Quality:
+    precision: float
+    recall: float
+    f_measure: float
+    tp: int
+    fp: int
+    fn: int
+
+    def row(self) -> str:
+        return (f"precision={self.precision:.2%} recall={self.recall:.2%} "
+                f"F={self.f_measure:.2%}")
+
+
+def quality(
+    candidate: PairSet,
+    predicted_match: np.ndarray,   # (P,) bool over candidate pairs
+    total_true_matches: int,       # over the whole dataset
+) -> Quality:
+    assert candidate.truth is not None
+    tp = int((predicted_match & candidate.truth).sum())
+    fp = int((predicted_match & ~candidate.truth).sum())
+    fn = total_true_matches - tp
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    f = 2 * prec * rec / max(prec + rec, 1e-12)
+    return Quality(prec, rec, f, tp, fp, fn)

@@ -1,0 +1,311 @@
+"""Parallel labeling (§5) — Algorithms 2 & 3 + the two optimizations.
+
+``parallel_crowdsourced_pairs`` (Algorithm 3): scan the sorted pairs through a
+fresh ClusterGraph; labeled pairs are inserted with their real label; an
+unlabeled pair that is *not* deducible (under the optimistic assumption that
+every unlabeled pair before it is matching) is emitted for crowdsourcing and
+inserted as matching.  Every emitted pair must be crowdsourced *no matter how*
+the in-flight pairs resolve, so the whole set can be published at once.
+
+``label_parallel`` (Algorithm 2): iterate selection -> crowdsource batch ->
+deduction sweep, until every pair is labeled.
+
+``simulate_stream``: event-driven simulator where pairs return one at a time —
+implements the **instant decision** (ID) and **non-matching first** (NF)
+optimizations of §5.2 and produces the Figure 16 availability curves.
+
+``simulate_wallclock``: discrete-event AMT simulator (HIT batching, worker
+pool, lognormal assignment latencies) for Table 1 / Table 2 completion times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .cluster_graph import ClusterGraph, MATCH, NON_MATCH
+from .crowd import CostModel, Crowd, LatencyModel
+from .labeling import LabelingResult
+from .pairs import PairSet
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3
+# ---------------------------------------------------------------------------
+def parallel_crowdsourced_pairs(
+    pairs: PairSet,
+    order: np.ndarray,
+    known: Dict[int, str],
+    exclude: Optional[Set[int]] = None,
+) -> List[int]:
+    """Returns pair indices that can be crowdsourced in parallel.
+
+    ``known``   — labels already obtained (crowdsourced or deduced).
+    ``exclude`` — already-published in-flight pairs: the instant-decision
+    change (§5.2) removes them from the output set, but they still participate
+    in the scan as assumed-matching (they are guaranteed crowdsourced pairs).
+    """
+    g = ClusterGraph(pairs.n_objects)
+    out: List[int] = []
+    u, v = pairs.u, pairs.v
+    for i in order:
+        i = int(i)
+        o, o2 = int(u[i]), int(v[i])
+        lab = known.get(i)
+        if lab is not None:
+            g.add_label(o, o2, lab)
+            continue
+        if g.deduce(o, o2) is None:
+            if exclude is None or i not in exclude:
+                out.append(i)
+            g.add_label(o, o2, MATCH)  # optimistic assumption
+        # deducible unlabeled pairs are skipped (insert nothing)
+    return out
+
+
+def deduction_sweep(
+    pairs: PairSet,
+    order: np.ndarray,
+    known: Dict[int, str],
+    skip: Optional[Set[int]] = None,
+) -> List[int]:
+    """Algorithm 2 lines 6-8: deduce every still-unlabeled pair that follows
+    from the labeled set.  Mutates ``known``; returns newly deduced indices.
+    Deduced labels add no edges to the ClusterGraph (a deduced-matching pair
+    lies within an existing cluster; a deduced-non-matching pair joins two
+    already-negatively-adjacent clusters), so a single sweep is complete."""
+    g = ClusterGraph(pairs.n_objects)
+    for i, lab in known.items():
+        g.add_label(int(pairs.u[i]), int(pairs.v[i]), lab)
+    newly: List[int] = []
+    for i in order:
+        i = int(i)
+        if i in known or (skip is not None and i in skip):
+            continue
+        d = g.deduce(int(pairs.u[i]), int(pairs.v[i]))
+        if d is not None:
+            known[i] = d
+            newly.append(i)
+    return newly
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+def label_parallel(pairs: PairSet, order: np.ndarray, crowd: Crowd) -> LabelingResult:
+    n = len(pairs)
+    known: Dict[int, str] = {}
+    crowdsourced = np.zeros(n, dtype=bool)
+    batch_sizes: List[int] = []
+    while len(known) < n:
+        batch = parallel_crowdsourced_pairs(pairs, order, known)
+        assert batch, "no progress — inconsistent state"
+        for i in batch:
+            known[i] = crowd.ask(pairs, i)
+            crowdsourced[i] = True
+        batch_sizes.append(len(batch))
+        deduction_sweep(pairs, order, known)
+    labels = np.zeros(n, dtype=bool)
+    for i, lab in known.items():
+        labels[i] = lab == MATCH
+    return LabelingResult(
+        labels=labels,
+        crowdsourced=crowdsourced,
+        n_iterations=len(batch_sizes),
+        batch_sizes=batch_sizes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# §5.2 event-driven stream simulator (Figure 16)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StreamTrace:
+    labeled_count: List[int]
+    available_count: List[int]
+    result: LabelingResult
+
+
+def simulate_stream(
+    pairs: PairSet,
+    order: np.ndarray,
+    crowd: Crowd,
+    mode: str = "parallel",  # parallel | id | id+nf
+    seed: int = 0,
+) -> StreamTrace:
+    """Pairs return from the platform one at a time.  ``parallel`` publishes a
+    new batch only when the platform drains; ``id`` re-selects instantly after
+    every returned label; ``id+nf`` additionally makes workers label probable-
+    non-matching pairs first (ascending likelihood)."""
+    assert mode in ("parallel", "id", "id+nf")
+    rng = np.random.default_rng(seed)
+    n = len(pairs)
+    known: Dict[int, str] = {}
+    crowdsourced = np.zeros(n, dtype=bool)
+    published: Set[int] = set()
+    batch_sizes: List[int] = []
+
+    def publish_initial():
+        batch = parallel_crowdsourced_pairs(pairs, order, known, exclude=published)
+        published.update(batch)
+        if batch:
+            batch_sizes.append(len(batch))
+
+    publish_initial()
+    trace_l, trace_a = [0], [len(published)]
+
+    while len(known) < n:
+        if not published:
+            # platform drained: sweep + republish (all modes)
+            deduction_sweep(pairs, order, known)
+            if len(known) == n:
+                break
+            publish_initial()
+            trace_l.append(len(known))
+            trace_a.append(len(published))
+            continue
+        # pick which in-flight pair the crowd finishes next
+        plist = sorted(published)
+        if mode == "id+nf":
+            # workers are steered to probable-non-matching pairs first
+            lik = pairs.likelihood[plist]
+            i = plist[int(np.argmin(lik))]
+        else:
+            i = plist[int(rng.integers(len(plist)))]
+        lab = crowd.ask(pairs, i)
+        known[i] = lab
+        crowdsourced[i] = True
+        published.discard(i)
+        if mode in ("id", "id+nf"):
+            # §5.2 non-matching-first observation: a returned MATCH agrees
+            # with the optimistic assumption — selection output cannot change.
+            if lab == NON_MATCH:
+                deduction_sweep(pairs, order, known, skip=published)
+                batch = parallel_crowdsourced_pairs(pairs, order, known, exclude=published)
+                published.update(batch)
+        trace_l.append(len(known) + (0 if mode != "parallel" else 0))
+        trace_a.append(len(published))
+
+    labels = np.zeros(n, dtype=bool)
+    for i, lab in known.items():
+        labels[i] = lab == MATCH
+    res = LabelingResult(
+        labels=labels,
+        crowdsourced=crowdsourced,
+        n_iterations=len(batch_sizes),
+        batch_sizes=batch_sizes,
+    )
+    return StreamTrace(trace_l, trace_a, res)
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event AMT wall-clock simulator (Tables 1 & 2)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class WallClock:
+    hours: float
+    n_hits: int
+    n_pairs_crowdsourced: int
+    cost_cents: float
+    labels: Dict[int, str]
+    hits: List[List[int]] = dataclasses.field(default_factory=list)
+
+
+def simulate_wallclock_parallel_id(
+    pairs: PairSet,
+    order: np.ndarray,
+    crowd: Crowd,
+    cost: CostModel,
+    latency: LatencyModel,
+    seed: int = 0,
+) -> WallClock:
+    """AMT deployment model of §6.4 for Parallel(ID): selected pairs are
+    batched 20-to-a-HIT, each HIT replicated into 3 assignments, a finite
+    worker pool draws assignments at random, per-assignment latency is
+    lognormal.  When a HIT completes, instant decision re-selects and new
+    HITs are published immediately."""
+    rng = np.random.default_rng(seed)
+    known: Dict[int, str] = {}
+    published: Set[int] = set()
+    hits: List[List[int]] = []          # hit id -> pair indices
+    hit_remaining: Dict[int, int] = {}  # hit id -> assignments outstanding
+    pending_pairs: List[int] = []       # selected, not yet batched into a HIT
+    assignment_queue: List[int] = []    # hit ids awaiting a worker
+    workers = [(0.0, w) for w in range(latency.n_workers)]
+    heapq.heapify(workers)
+    events: List[Tuple[float, int, int]] = []  # (time, seq, hit id)
+    seq = 0
+    now = 0.0
+
+    def select_new():
+        batch = parallel_crowdsourced_pairs(pairs, order, known, exclude=published)
+        published.update(batch)
+        pending_pairs.extend(batch)
+
+    def flush_hits(force: bool):
+        while len(pending_pairs) >= cost.pairs_per_hit or (force and pending_pairs):
+            chunk = pending_pairs[: cost.pairs_per_hit]
+            del pending_pairs[: len(chunk)]
+            hid = len(hits)
+            hits.append(chunk)
+            hit_remaining[hid] = cost.assignments_per_hit
+            assignment_queue.extend([hid] * cost.assignments_per_hit)
+
+    def dispatch():
+        nonlocal seq
+        while assignment_queue and workers[0][0] <= now + 1e-9:
+            _, w = heapq.heappop(workers)
+            k = int(rng.integers(len(assignment_queue)))  # AMT random pick
+            hid = assignment_queue.pop(k)
+            done = now + float(latency.draw_minutes(rng, 1)[0])
+            heapq.heappush(events, (done, seq, hid))
+            seq += 1
+            heapq.heappush(workers, (done, w))
+
+    select_new()
+    flush_hits(force=True)
+    dispatch()
+
+    while events:
+        now, _, hid = heapq.heappop(events)
+        hit_remaining[hid] -= 1
+        if hit_remaining[hid] == 0:
+            # HIT complete: all its pairs get their majority-vote labels
+            for i in hits[hid]:
+                known[i] = crowd.ask(pairs, i)
+                published.discard(i)
+            deduction_sweep(pairs, order, known, skip=published)
+            select_new()
+            # flush a partial HIT only when the platform would otherwise idle
+            flush_hits(force=not events and not assignment_queue)
+        dispatch()
+
+    # anything still unlabeled is deducible
+    deduction_sweep(pairs, order, known)
+    n_pairs = sum(len(h) for h in hits)
+    return WallClock(
+        hours=now / 60.0,
+        n_hits=len(hits),
+        n_pairs_crowdsourced=n_pairs,
+        cost_cents=len(hits) * cost.assignments_per_hit * cost.cents_per_assignment,
+        labels=known,
+        hits=hits,
+    )
+
+
+def simulate_wallclock_sequential(
+    hits: List[List[int]],
+    cost: CostModel,
+    latency: LatencyModel,
+    seed: int = 0,
+) -> float:
+    """Non-Parallel baseline of Table 1: the *same* HITs as Parallel(ID),
+    published one at a time — each HIT's 3 assignments run concurrently, the
+    next HIT is published only when the previous completes.  Returns hours."""
+    rng = np.random.default_rng(seed + 1)
+    total_min = 0.0
+    for _ in hits:
+        total_min += float(latency.draw_minutes(rng, cost.assignments_per_hit).max())
+    return total_min / 60.0

@@ -1,0 +1,18 @@
+"""Jitted public wrapper for flash-decode."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import decode_attention as _kernel_call
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k_cache, v_cache, length, impl: str = "auto",
+                     bs: int = 512):
+    """One-token attention over a KV cache.  q: (B,H,d); caches (B,S,K,d)."""
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, length)
+    interpret = (impl == "interpret") or (
+        impl == "auto" and jax.default_backend() != "tpu")
+    return _kernel_call(q, k_cache, v_cache, length, bs=bs,
+                        interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: single-token attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q: (B, H, d); caches: (B, S, K, d); length: () — valid prefix."""
+    B, H, d = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    valid = jnp.arange(k_cache.shape[1]) < length
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, d).astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Jitted public wrapper for flash attention: backend dispatch + GQA checks."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention as _kernel_call
+from .ref import mha_causal_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    impl: str = "auto", bq: int = 128, bk: int = 128):
+    """Causal attention. q: (B,S,H,d); k,v: (B,S,K,d).
+
+    impl: 'auto' (pallas on TPU, interpret elsewhere), 'pallas',
+    'interpret', or 'ref'."""
+    if impl == "ref":
+        return mha_causal_ref(q, k, v)
+    interpret = (impl == "interpret") or (
+        impl == "auto" and jax.default_backend() != "tpu")
+    return _kernel_call(q, k, v, bq=bq, bk=bk, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: causal multi-head attention (GQA via head repetition)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_causal_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """q: (B, S, H, d); k, v: (B, S, K, d) with H % K == 0."""
+    B, S, H, d = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, d).astype(q.dtype)

@@ -1,0 +1,49 @@
+"""Jitted public wrapper for the pair-scores kernel: normalization, padding
+to tile multiples, backend dispatch (Pallas on TPU, interpret mode on CPU),
+and oracle fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BM, DEFAULT_BN, pair_scores as _kernel_call
+from .ref import pair_scores_ref
+
+
+def l2_normalize(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True)
+    return (x / jnp.maximum(n, eps)).astype(x.dtype)
+
+
+def pair_scores(a: jax.Array, b: jax.Array, threshold: float,
+                normalize: bool = True, impl: str = "auto"):
+    """Similarity of all (a_i, b_j) pairs with fused thresholding.
+
+    impl: 'auto' (pallas on TPU, interpret elsewhere), 'pallas',
+    'interpret', or 'ref'."""
+    if normalize:
+        a = l2_normalize(a)
+        b = l2_normalize(b)
+    if impl == "ref":
+        s, c = pair_scores_ref(a, b, threshold)
+        return s, c[:, None]
+    interpret = (impl == "interpret") or (
+        impl == "auto" and jax.default_backend() != "tpu")
+    N, M = a.shape[0], b.shape[0]
+    bn = min(DEFAULT_BN, N)
+    bm = min(DEFAULT_BM, M)
+    pn = (-N) % bn
+    pm = (-M) % bm
+    if pn or pm:
+        a = jnp.pad(a, ((0, pn), (0, 0)))
+        b = jnp.pad(b, ((0, pm), (0, 0)))
+    s, c = _kernel_call(a, b, float(threshold), bn=bn, bm=bm,
+                        interpret=interpret)
+    if pm:
+        # padded b rows have zero norm -> score 0 < tau (tau > 0); but counts
+        # must exclude them when tau <= 0
+        s = s[:, :M]
+    if pn:
+        s = s[:N]
+        c = c[:N]
+    return s, c

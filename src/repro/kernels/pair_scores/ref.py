@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the pair-similarity kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pair_scores_ref(a: jnp.ndarray, b: jnp.ndarray, threshold: float):
+    """Cosine-style similarity of every (row of a, row of b) pair.
+
+    a: (N, D), b: (M, D) — L2-normalized embeddings.
+    Returns (scores (N, M) f32 zeroed below threshold, counts (N,) i32 of
+    above-threshold candidates per left record)."""
+    s = jnp.einsum("nd,md->nm", a.astype(jnp.float32), b.astype(jnp.float32))
+    mask = s >= threshold
+    return jnp.where(mask, s, 0.0), mask.sum(axis=1).astype(jnp.int32)

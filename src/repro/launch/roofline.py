@@ -1,0 +1,153 @@
+"""Roofline analysis (deliverable g) over the dry-run JSON artifacts.
+
+Terms per (arch, shape) cell on the single-pod 16x16 mesh (TPU v5e targets:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+  compute    = HLO_FLOPs_per_chip / 197e12
+  memory     = HLO_bytes_per_chip / 819e9
+  collective = collective_bytes_per_chip / 50e9
+
+HLO terms use the per-layer decomposition (outer + L x layer [+ shared]) —
+see launch/dryrun.py for why the full-model cost_analysis cannot be used
+directly (while-loop bodies counted once).  The roofline fraction is
+
+  frac = (MODEL_FLOPS / chips / 197e12) / max(terms)
+
+i.e. the MFU bound implied by the dominant term.  ``python -m
+repro.launch.roofline`` prints the EXPERIMENTS.md table and the hillclimb
+candidate selection.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def cell_terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok" or "accounting" not in rec:
+        return None
+    acc = rec["accounting"]
+    L = acc["n_layers"]
+    scale = acc.get("layer_scale", 1.0)
+    lay = acc["layer"]
+    f = lay["flops"] * L * scale
+    b = lay["bytes"] * L * scale
+    c = lay["collectives"]["total"] * L * scale
+    if "shared" in acc:
+        ns = acc.get("n_shared", 0)
+        f += acc["shared"]["flops"] * ns
+        b += acc["shared"]["bytes"] * ns
+        c += acc["shared"]["collectives"]["total"] * ns
+    f += acc["outer"]["flops"]
+    b += acc["outer"]["bytes"]
+    c += acc["outer"]["collectives"]["total"]
+    f += acc.get("optimizer_flops_analytic", 0.0)
+    if "flash_kernel" in acc:
+        f += acc["flash_kernel"]["flops"]
+        b += acc["flash_kernel"]["bytes"]
+    n_dev = rec["n_devices"]
+    model_flops_dev = rec["model_flops"] / n_dev
+    terms = {
+        "compute_s": f / PEAK_FLOPS,
+        "memory_s": b / HBM_BW,
+        "collective_s": c / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    shape_kind = ("decode" if rec["shape"].startswith(("decode", "long"))
+                  else "other")
+    if shape_kind == "decode":
+        # decode is bandwidth-limited by construction: the roofline fraction
+        # is MBU-style — must-read bytes (params + cache once) / bound time
+        ideal_bytes = (2.0 * rec.get("n_active_params", rec["n_params"]) +
+                       rec.get("cache_bytes", 0.0)) / n_dev
+        if "cache_bytes" not in rec:
+            # estimate cache bytes from memory_analysis arguments
+            ideal_bytes = rec.get("memory", {}).get("argument_bytes", 0.0)
+        frac = (ideal_bytes / HBM_BW) / max(max(terms.values()), 1e-12)
+    else:
+        frac = (model_flops_dev / PEAK_FLOPS) / max(max(terms.values()), 1e-12)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "rules": rec.get("rules", "fsdp_tp"),
+        "hlo_flops_dev": f,
+        "hlo_bytes_dev": b,
+        "coll_bytes_dev": c,
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": rec["model_flops"],
+        "useful_ratio": model_flops_dev / max(f, 1e-9),
+        "roofline_frac": frac,
+        "mem_gb_dev": (rec.get("memory", {}).get("temp_bytes", 0)
+                       + rec.get("memory", {}).get("argument_bytes", 0)) / 1e9,
+        "fallbacks": rec.get("sharding_fallbacks", []),
+    }
+
+
+def load_cells(art_dir: Path, rules: str = "fsdp_tp") -> List[dict]:
+    cells = []
+    for p in sorted(art_dir.glob(f"*__pod16x16__{rules}.json")):
+        rec = json.loads(p.read_text())
+        t = cell_terms(rec)
+        if t:
+            cells.append(t)
+        elif rec.get("status", "").startswith("skipped"):
+            cells.append({"arch": rec["arch"], "shape": rec["shape"],
+                          "rules": rules, "skipped": rec["status"]})
+    return cells
+
+
+def markdown_table(cells: List[dict]) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | useful FLOP ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|")
+    rows = [hdr]
+    for c in cells:
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"{c['skipped'].split('(')[0]} | — | — |")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']*1e3:.1f} | "
+            f"{c['memory_s']*1e3:.1f} | {c['collective_s']*1e3:.1f} | "
+            f"**{c['dominant']}** | {c['useful_ratio']:.2f} | "
+            f"{c['roofline_frac']:.1%} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells: List[dict]) -> Dict[str, dict]:
+    live = [c for c in cells if "skipped" not in c]
+    worst = min(live, key=lambda c: c["roofline_frac"])
+    coll = max(live, key=lambda c: c["collective_s"] /
+               max(c["compute_s"] + c["memory_s"], 1e-12))
+    # representative of the paper's technique: the scorer serving shape —
+    # batched prefill is what the machine phase of the join pipeline runs
+    reps = [c for c in live if c["shape"] == "prefill_32k"]
+    rep = max(reps, key=lambda c: c["model_flops"]) if reps else live[0]
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--rules", default="fsdp_tp")
+    args = ap.parse_args()
+    cells = load_cells(Path(args.artifacts), args.rules)
+    print(markdown_table(cells))
+    print()
+    picks = pick_hillclimb(cells)
+    for k, c in picks.items():
+        print(f"{k}: {c['arch']} x {c['shape']} "
+              f"(dominant={c['dominant']}, frac={c['roofline_frac']:.1%})")
+
+
+if __name__ == "__main__":
+    main()

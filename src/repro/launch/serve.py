@@ -1,0 +1,45 @@
+"""Serving launcher: batched generation with the ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch paper-scorer --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-scorer")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch_lanes=args.lanes, max_len=256)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab, size=rng.integers(4, 24)
+                                        ).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    out = engine.generate(reqs)
+    for rid in sorted(out):
+        print(f"req {rid}: {out[rid][:12]}{'...' if len(out[rid]) > 12 else ''}")
+    print(f"[serve] {len(out)} requests completed")
+
+
+if __name__ == "__main__":
+    main()

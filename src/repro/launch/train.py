@@ -1,0 +1,73 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch paper-scorer \
+        --steps 200 --batch 8 --seq 128 [--reduced] [--compress-grads]
+
+On this CPU container only reduced configs train for real; the full configs
+are exercised via the dry-run (`repro.launch.dryrun`).  On a TPU slice the
+same launcher builds the production mesh instead of the host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get
+from repro.data.entities import load_dataset
+from repro.data.tokens import TokenPipeline, corpus_from_records
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.fault import FailureInjector
+from repro.train.optim import AdamWConfig
+from repro.train.runner import Runner, RunnerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-scorer")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="checkpoints/train")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--dataset", default="paper",
+                    help="entity dataset providing the training text")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject a simulated node failure at this step")
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ds = load_dataset(args.dataset)
+    rows = corpus_from_records(ds.records, cfg.vocab, args.seq)
+    pipe = TokenPipeline(rows, global_batch=args.batch)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh(1, 1))
+    injector = FailureInjector(
+        fail_at_steps=(args.fail_at,) if args.fail_at >= 0 else ())
+    runner = Runner(
+        cfg,
+        AdamWConfig(lr=args.lr, total_steps=args.steps,
+                    warmup_steps=max(2, args.steps // 20)),
+        RunnerConfig(total_steps=args.steps,
+                     checkpoint_every=args.checkpoint_every,
+                     checkpoint_dir=args.checkpoint_dir,
+                     microbatches=args.microbatches,
+                     compress_grads=args.compress_grads),
+        mesh, pipe, injector=injector)
+    out = runner.run()
+    hist = out["history"]
+    print(f"[train] done: {out['final_step']} steps, "
+          f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

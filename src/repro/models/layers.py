@@ -1,0 +1,335 @@
+"""Core transformer layers: RMSNorm, RoPE / M-RoPE, GQA attention (chunked
+online-softmax = flash-equivalent memory/FLOP behaviour, plus a naive
+reference), SwiGLU MLP.
+
+Parameter convention: every builder contributes to a flat
+``{path: ParamSpec(shape, axes, fan_in)}`` dict; ``axes`` are *logical* axis
+names resolved to mesh axes by :mod:`repro.sharding`.  Per-layer params are
+stacked with a leading ``layers`` axis for ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    fan_in: int = 0          # 0 => init scale 1.0 (norm scales)
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def zeros_init(self) -> bool:
+        return self.fan_in < 0   # convention: fan_in=-1 => init to zeros
+
+
+Specs = Dict[str, ParamSpec]
+
+
+# ---------------------------------------------------------------------------
+# Norm
+# ---------------------------------------------------------------------------
+def rmsnorm_specs(d: int) -> Specs:
+    return {"scale": ParamSpec((d,), (None,), fan_in=0)}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    return rmsnorm(x, scale, eps), (x, scale)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    """Backward with the INPUT cotangent cast back to x.dtype: the residual
+    stream is bf16, so the dx that flows into the layer's TP all-reduce stays
+    bf16 instead of the f32 the default VJP produces (halves the dominant
+    collective payload of dense train cells — EXPERIMENTS.md §Perf H2/H3)."""
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = xf * rstd
+    s1 = 1.0 + scale.astype(jnp.float32)
+    gy = gf * s1
+    # d/dx of xhat: rstd * (gy - xhat * mean(gy * xhat))
+    dx = rstd * (gy - xhat * jnp.mean(gy * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum(gf * xhat, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, N, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL M-RoPE: x (B,S,N,hd); positions3 (B,S,3) — temporal/height/
+    width position per token; the hd/2 rotary channels are split into three
+    sections, each rotated by its own position stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # section id per rotary channel
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                 # (B,S,3)
+        jnp.broadcast_to(sec, positions3.shape[:2] + sec.shape).astype(jnp.int32),
+        axis=-1,
+    )                                                   # (B,S,hd/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention_specs(cfg: ModelConfig, d_in: Optional[int] = None) -> Specs:
+    d = d_in or cfg.d_model
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamSpec((d, H * hd), ("embed", "qheads"), fan_in=d),
+        "wk": ParamSpec((d, K * hd), ("embed", "kvheads"), fan_in=d),
+        "wv": ParamSpec((d, K * hd), ("embed", "kvheads"), fan_in=d),
+        "wo": ParamSpec((H * hd, cfg.d_model), ("qheads", "embed"), fan_in=H * hd),
+    }
+
+
+def _qkv(x: jax.Array, p: Dict, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    return q, k, v
+
+
+def _position_encode(q, k, positions, cfg: ModelConfig):
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (keeps the chunk grid exact)."""
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def naive_causal_attention(q, k, v, cfg: ModelConfig) -> jax.Array:
+    """Reference O(S^2)-memory attention (small shapes / oracles only)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def chunked_causal_attention(q, k, v, cfg: ModelConfig,
+                             unroll: bool = False) -> jax.Array:
+    """Flash-equivalent chunked attention: online softmax over KV chunks,
+    triangular chunk schedule (no wasted full-rectangle FLOPs).  ``unroll``
+    replaces the scans with python loops so the dry-run FLOP accounting sees
+    every chunk pair (XLA cost analysis does not multiply loop bodies)."""
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    cq = _pick_chunk(S, cfg.attn_chunk_q)
+    ck = _pick_chunk(S, cfg.attn_chunk_k)
+    nq, nk = S // cq, S // ck
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, nq, cq, Kh, G, hd)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, Kh, hd), 1, 0)   # (nk,B,ck,K,hd)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, Kh, hd), 1, 0)
+    q_pos = jnp.arange(S).reshape(nq, cq)
+    k_pos = jnp.arange(S).reshape(nk, ck)
+
+    def kv_step(carry, kv, q_i, qpos_i, kpos_j):
+        m, l, acc = carry
+        k_j, v_j = kv
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_i, k_j).astype(jnp.float32)
+        s = s * scale
+        mask = qpos_i[:, None] >= kpos_j[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v_j.dtype), v_j).astype(jnp.float32)
+        return m_new, l, acc
+
+    # flash semantics in the backward too: recompute the (cq x ck) probability
+    # blocks instead of saving them as scan residuals (without this the bwd
+    # residuals are O(S^2) bytes — the exact pathology flash attention fixes)
+    kv_step_ckpt = jax.checkpoint(kv_step)
+
+    outs = []
+    for qi in range(nq):                     # python loop: static bounds
+        q_i = qg[:, qi]
+        n_kc = ((qi + 1) * cq + ck - 1) // ck   # triangular: chunks attended
+        m = jnp.full((B, Kh, G, cq), -1e30, jnp.float32)
+        l = jnp.zeros((B, Kh, G, cq), jnp.float32)
+        acc = jnp.zeros((B, Kh, G, cq, hd), jnp.float32)
+        if unroll:
+            carry = (m, l, acc)
+            for kj in range(n_kc):
+                carry = kv_step_ckpt(carry, (kc[kj], vc[kj]), q_i, q_pos[qi],
+                                     k_pos[kj])
+            m, l, acc = carry
+        else:
+            def body(carry, inp):
+                kj_k, kj_v, kj_pos = inp
+                return kv_step_ckpt(carry, (kj_k, kj_v), q_i, q_pos[qi],
+                                    kj_pos), None
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m, l, acc), (kc[:n_kc], vc[:n_kc], k_pos[:n_kc]))
+        outs.append((acc / l[..., None]).astype(q.dtype))
+    out = jnp.stack(outs, axis=3)            # (B,K,G,nq,cq,hd)
+    out = out.reshape(B, Kh, G, S, hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, hd)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, length, cfg: ModelConfig) -> jax.Array:
+    """Single-position attention over a KV cache.
+    q: (B, 1, H, hd); caches: (B, S_max, K, hd); length: () int32."""
+    B, _, H, hd = q.shape
+    Kh = k_cache.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(k_cache.shape[1]) < length
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def attention_block(x, p, cfg: ModelConfig, positions,
+                    unroll: bool = False) -> jax.Array:
+    """Train/prefill attention (causal, full sequence)."""
+    q, k, v = _qkv(x, p, cfg)
+    q, k = _position_encode(q, k, positions, cfg)
+    if cfg.attn_impl == "naive":
+        o = naive_causal_attention(q, k, v, cfg)
+    elif cfg.attn_impl == "kernel_stub":
+        # dry-run accounting stand-in for the Pallas flash kernel: keep the
+        # projections (real matmuls outside the kernel) but skip the inner
+        # attention; the kernel's FLOPs/HBM-bytes are added analytically
+        # (launch/dryrun.py flash_kernel_costs) — the kernel itself is
+        # validated against the oracle in tests/test_kernels.py.
+        G = q.shape[2] // k.shape[2]
+        o = (jnp.repeat(k, G, axis=2) + q) * 0.5 + jnp.repeat(v, G, axis=2)
+    else:
+        o = chunked_causal_attention(q, k, v, cfg, unroll=unroll)
+    B, S, _, _ = q.shape
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def quantize_kv(x):
+    """Per-(token, head) symmetric int8 quantization. x: (B,1,K,hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attention_decode_block(x, p, cfg: ModelConfig, positions, k_cache,
+                           v_cache, length, k_scale=None, v_scale=None):
+    """One-token decode: returns (out, new_k_cache, new_v_cache[, scales]).
+    x: (B,1,d); caches (B,S_max,K,hd); length = current cache fill.
+    With cfg.kv_quant the caches are int8 + per-(token,head) bf16 scales —
+    HBM traffic per decoded token halves vs bf16 (the decode_attention Pallas
+    kernel dequantizes in VMEM)."""
+    q, k, v = _qkv(x, p, cfg)
+    q, k = _position_encode(q, k, positions, cfg)
+    if cfg.kv_quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, length, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, length, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, length, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, length, axis=1)
+        kd = k_cache.astype(jnp.bfloat16) * k_scale[..., None]
+        vd = v_cache.astype(jnp.bfloat16) * v_scale[..., None]
+        o = decode_attention(q, kd, vd, length + 1, cfg)
+        B = x.shape[0]
+        out = o.reshape(B, 1, -1) @ p["wo"]
+        return out, k_cache, v_cache, k_scale, v_scale
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, length, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, length, axis=1)
+    o = decode_attention(q, k_cache, v_cache, length + 1, cfg)
+    B = x.shape[0]
+    out = o.reshape(B, 1, -1) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: ModelConfig) -> Specs:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "mlp"), fan_in=d),
+        "wi_up": ParamSpec((d, f), ("embed", "mlp"), fan_in=d),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), fan_in=f),
+    }
+
+
+def mlp_block(x: jax.Array, p: Dict, cfg: ModelConfig) -> jax.Array:
+    g = jax.nn.silu((x @ p["wi_gate"]).astype(jnp.float32)).astype(x.dtype)
+    u = x @ p["wi_up"]
+    return (g * u) @ p["wo"]

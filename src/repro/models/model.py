@@ -1,0 +1,559 @@
+"""Model assembly for all architecture families.
+
+Parameters are a nested dict pytree; per-layer params carry a leading
+``layers`` axis and the backbone runs under ``lax.scan`` (bounds HLO size at
+95 layers) with optional per-block remat.  A single spec table per config is
+the source of truth for shapes, logical sharding axes and init; the dry-run
+gets abstract params via ``jax.eval_shape(init_params, ...)`` (no allocation).
+
+Entry points
+  init_params / param_axes                — params + logical axes pytrees
+  loss_fn(params, batch, cfg)             — next-token CE train loss
+  prefill(params, batch, cfg)             — inference prefill -> (cache, logits)
+  decode_step(params, cache, batch, cfg)  — one-token decode with cache
+  layer_step / decode_layer_step          — single-layer fns for the dry-run
+                                            FLOP accounting (inner loops can
+                                            be unrolled; see launch/dryrun.py)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (ParamSpec, Specs, _position_encode, _qkv,
+                     attention_block, attention_decode_block, attention_specs,
+                     chunked_causal_attention, mlp_block, mlp_specs, rmsnorm,
+                     rmsnorm_specs)
+from .moe import moe_block, moe_specs
+from .ssm import (mamba2_block, mamba2_decode_step, mamba2_specs,
+                  rwkv6_channel_mix, rwkv6_specs, rwkv6_time_mix)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Spec tables
+# ---------------------------------------------------------------------------
+def _prefix(prefix: str, specs: Specs) -> Specs:
+    return {f"{prefix}/{k}": v for k, v in specs.items()}
+
+
+def layer_specs(cfg: ModelConfig) -> Specs:
+    """Specs for ONE layer (no leading layers axis)."""
+    s: Specs = {}
+    if cfg.rwkv:
+        s.update(_prefix("ln1", rmsnorm_specs(cfg.d_model)))
+        s.update(_prefix("ln2", rmsnorm_specs(cfg.d_model)))
+        s.update(rwkv6_specs(cfg))
+        return s
+    if cfg.family == "hybrid":
+        s.update(_prefix("ln1", rmsnorm_specs(cfg.d_model)))
+        s.update(_prefix("mamba", mamba2_specs(cfg)))
+        return s
+    # attention families
+    s.update(_prefix("ln1", rmsnorm_specs(cfg.d_model)))
+    s.update(_prefix("ln2", rmsnorm_specs(cfg.d_model)))
+    s.update(_prefix("attn", attention_specs(cfg)))
+    if cfg.is_moe:
+        s.update(_prefix("moe", moe_specs(cfg)))
+    else:
+        s.update(_prefix("mlp", mlp_specs(cfg)))
+    return s
+
+
+def shared_attn_specs(cfg: ModelConfig) -> Specs:
+    """zamba2 shared attention(+MLP) block over concat(hidden, embedding)."""
+    s: Specs = {}
+    s.update(_prefix("ln_in", rmsnorm_specs(2 * cfg.d_model)))
+    s.update(_prefix("attn", attention_specs(cfg, d_in=2 * cfg.d_model)))
+    s.update(_prefix("ln_mlp", rmsnorm_specs(cfg.d_model)))
+    s.update(_prefix("mlp", mlp_specs(cfg)))
+    return s
+
+
+def model_specs(cfg: ModelConfig) -> Specs:
+    s: Specs = {
+        "embed/table": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                                 fan_in=cfg.d_model),
+        "final_norm/scale": ParamSpec((cfg.d_model,), (None,), fan_in=0),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head/w"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                                   fan_in=cfg.d_model)
+    for k, v in layer_specs(cfg).items():
+        s[f"layers/{k}"] = ParamSpec((cfg.n_layers,) + v.shape,
+                                     ("layers",) + v.axes, v.fan_in, v.dtype)
+    if cfg.attn_every:
+        for k, v in shared_attn_specs(cfg).items():
+            s[f"shared/{k}"] = v
+    return s
+
+
+def _nest(flat: Dict[str, Any]) -> Params:
+    out: Params = {}
+    for path, v in flat.items():
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def _special_init(path: str, spec: ParamSpec, key) -> Optional[jax.Array]:
+    leaf = path.split("/")[-1]
+    if leaf == "A_log":
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if leaf == "dt_bias":
+        dt = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(dt)).astype(spec.dtype)
+    if leaf == "D":
+        return jnp.ones(spec.shape, spec.dtype)
+    if leaf == "w0":
+        return jnp.full(spec.shape, -5.0, spec.dtype)
+    if leaf.startswith("mu_"):
+        return jnp.full(spec.shape, 0.5, spec.dtype)
+    if leaf == "bonus_u":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.1).astype(spec.dtype)
+    return None
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    specs = model_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    flat = {}
+    for (path, spec), k in zip(sorted(specs.items()), keys):
+        sp = _special_init(path, spec, k)
+        if sp is not None:
+            flat[path] = sp
+        elif spec.fan_in == 0:
+            flat[path] = jnp.zeros(spec.shape, spec.dtype)
+        else:
+            scale = 1.0 / math.sqrt(max(spec.fan_in, 1))
+            flat[path] = (jax.random.normal(k, spec.shape, jnp.float32) * scale
+                          ).astype(spec.dtype)
+    return _nest(flat)
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    return _nest({p: s.axes for p, s in model_specs(cfg).items()})
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return _nest({
+        p: jax.ShapeDtypeStruct(s.shape, s.dtype)
+        for p, s in model_specs(cfg).items()
+    })
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s.shape) for s in model_specs(cfg).values())
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Per-token active params (MoE: top_k of n_experts)."""
+    total = 0
+    for p, s in model_specs(cfg).items():
+        sz = math.prod(s.shape)
+        if "/moe/w" in p:
+            sz = sz * cfg.top_k // cfg.n_experts
+        total += sz
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by train forward / prefill / accounting)
+# ---------------------------------------------------------------------------
+def layer_step(lp: Params, x: jax.Array, positions: jax.Array,
+               layer_idx: jax.Array, cfg: ModelConfig,
+               shared: Optional[Params] = None,
+               x_embed: Optional[jax.Array] = None,
+               unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """One backbone layer. Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.rwkv:
+        B = x.shape[0]
+        zero = jnp.zeros((B, 1, cfg.d_model), x.dtype)
+        h, _, _ = rwkv6_time_mix(rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps),
+                                 zero, lp, cfg, unroll=unroll)
+        x = x + h
+        h, _ = rwkv6_channel_mix(rmsnorm(x, lp["ln2"]["scale"], cfg.norm_eps),
+                                 zero, lp, cfg)
+        x = x + h
+        return x, aux
+    if cfg.family == "hybrid":
+        h = rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+        x = x + mamba2_block(h, lp["mamba"], cfg, unroll=unroll)
+        if cfg.attn_every and shared is not None:
+            def apply_shared(xx):
+                cat = jnp.concatenate([xx, x_embed], axis=-1)
+                h2 = rmsnorm(cat, shared["ln_in"]["scale"], cfg.norm_eps)
+                a = attention_block(h2, shared["attn"], cfg, positions,
+                                    unroll=unroll)
+                xx = xx + a
+                h3 = rmsnorm(xx, shared["ln_mlp"]["scale"], cfg.norm_eps)
+                return xx + mlp_block(h3, shared["mlp"], cfg)
+            x = jax.lax.cond(layer_idx % cfg.attn_every == 0, apply_shared,
+                             lambda xx: xx, x)
+        return x, aux
+    # attention families
+    h = rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    x = x + attention_block(h, lp["attn"], cfg, positions, unroll=unroll)
+    h = rmsnorm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    if cfg.is_moe:
+        if cfg.moe_impl == "a2a":
+            from repro.sharding import _CURRENT
+            from .moe_a2a import moe_block_a2a
+            m, aux = moe_block_a2a(h, lp["moe"], cfg, _CURRENT["mesh"])
+        else:
+            m, aux = moe_block(h, lp["moe"], cfg)
+    else:
+        m = mlp_block(h, lp["mlp"], cfg)
+    x = x + m
+    return x, aux
+
+
+def _embed_inputs(params: Params, batch: Dict[str, jax.Array],
+                  cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B,S,d), positions)."""
+    tokens = batch["tokens"]
+    x = params["embed"]["table"][tokens]
+    prefix = batch.get("prefix_embeds")     # vlm patches / audio frames (stub)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    if cfg.mrope:
+        positions = batch["positions3"]     # (B,S,3) from the vision stub
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def backbone(params: Params, x: jax.Array, positions: jax.Array,
+             cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Scan over layers. Returns (hidden, total aux loss)."""
+    shared = params.get("shared")
+    x_embed = x if cfg.attn_every else None
+
+    def body(carry, inp):
+        xx, aux_sum = carry
+        lp, li = inp
+        fn = lambda q: layer_step(lp, q, positions, li, cfg, shared, x_embed)
+        if cfg.remat == "block":
+            fn = jax.checkpoint(fn)
+        xx, aux = fn(xx)
+        return (xx, aux_sum + aux), None
+
+    lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               (params["layers"], lidx))
+    return x, aux
+
+
+def _logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"]["w"])
+    logits = x @ head
+    return logits.astype(jnp.float32) if cfg.logits_f32 else logits
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> jax.Array:
+    """Next-token cross-entropy; positions with target < 0 are masked."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    x, aux = backbone(params, x, positions, cfg)
+    logits = _logits(params, x, cfg)
+    targets = batch["targets"]               # (B, S_total) aligned with x
+    mask = (targets >= 0).astype(jnp.float32)
+    t = jnp.clip(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+def make_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Abstract-shape-compatible cache pytree (zeros)."""
+    L = cfg.n_layers
+    c: Params = {"length": jnp.zeros((), jnp.int32)}
+    if cfg.rwkv:
+        H = cfg.d_model // cfg.ssm_head_dim
+        hd = cfg.ssm_head_dim
+        c["wkv"] = jnp.zeros((L, batch, H, hd, hd), jnp.float32)
+        c["tm_x"] = jnp.zeros((L, batch, 1, cfg.d_model), jnp.bfloat16)
+        c["cm_x"] = jnp.zeros((L, batch, 1, cfg.d_model), jnp.bfloat16)
+        return c
+    if cfg.family == "hybrid":
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        c["ssm"] = jnp.zeros((L, batch, H, N, P), jnp.float32)
+        c["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16)
+        ns = cfg.n_shared_attn
+        c["k"] = jnp.zeros((ns, batch, max_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16)
+        c["v"] = jnp.zeros((ns, batch, max_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16)
+        return c
+    kv_dt = jnp.int8 if cfg.kv_quant else jnp.bfloat16
+    c["k"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd), kv_dt)
+    c["v"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd), kv_dt)
+    if cfg.kv_quant:
+        c["k_scale"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads), jnp.bfloat16)
+        c["v_scale"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads), jnp.bfloat16)
+    return c
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    """Logical axes for cache sharding (batch over data, heads over model)."""
+    ax: Params = {"length": ()}
+    if cfg.rwkv:
+        ax["wkv"] = (None, "batch", "ssm_heads", None, None)
+        ax["tm_x"] = (None, "batch", None, None)
+        ax["cm_x"] = (None, "batch", None, None)
+        return ax
+    if cfg.family == "hybrid":
+        ax["ssm"] = (None, "batch", "ssm_heads", None, None)
+        ax["conv"] = (None, "batch", None, None)
+        ax["k"] = (None, "batch", "kv_seq", "kv_cache_heads", None)
+        ax["v"] = (None, "batch", "kv_seq", "kv_cache_heads", None)
+        return ax
+    ax["k"] = (None, "batch", "kv_seq", "kv_cache_heads", None)
+    ax["v"] = (None, "batch", "kv_seq", "kv_cache_heads", None)
+    if cfg.kv_quant:
+        ax["k_scale"] = (None, "batch", "kv_seq", "kv_cache_heads")
+        ax["v_scale"] = (None, "batch", "kv_seq", "kv_cache_heads")
+    return ax
+
+
+def decode_layer_step(lp: Params, x: jax.Array, cfg: ModelConfig,
+                      layer_cache: Dict[str, jax.Array], length: jax.Array,
+                      positions: jax.Array, layer_idx: jax.Array):
+    """One layer of single-token decode (non-hybrid families).
+    Returns (x, new_layer_cache)."""
+    new_cache = dict(layer_cache)
+    if cfg.rwkv:
+        h = rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+        h, wkv, tm_x = rwkv6_time_mix(h, layer_cache["tm_x"], lp, cfg,
+                                      state0=layer_cache["wkv"])
+        x = x + h
+        h = rmsnorm(x, lp["ln2"]["scale"], cfg.norm_eps)
+        h, cm_x = rwkv6_channel_mix(h, layer_cache["cm_x"], lp, cfg)
+        x = x + h
+        new_cache.update(wkv=wkv, tm_x=tm_x, cm_x=cm_x)
+        return x, new_cache
+    h = rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    if cfg.kv_quant:
+        a, kc, vc, ks, vs = attention_decode_block(
+            h, lp["attn"], cfg, positions, layer_cache["k"], layer_cache["v"],
+            length, layer_cache["k_scale"], layer_cache["v_scale"])
+        new_cache.update(k_scale=ks, v_scale=vs)
+    else:
+        a, kc, vc = attention_decode_block(h, lp["attn"], cfg, positions,
+                                           layer_cache["k"], layer_cache["v"],
+                                           length)
+    x = x + a
+    h = rmsnorm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    if cfg.is_moe:
+        m, _ = moe_block(h, lp["moe"], cfg)
+    else:
+        m = mlp_block(h, lp["mlp"], cfg)
+    x = x + m
+    return x, new_cache
+
+
+def decode_step(params: Params, cache: Params, batch: Dict[str, jax.Array],
+                cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """One new token for every sequence in the batch.
+    batch: {"tokens": (B,1) int32}. Returns (logits (B,1,V), new cache)."""
+    tokens = batch["tokens"]
+    x = params["embed"]["table"][tokens]           # (B,1,d)
+    B = x.shape[0]
+    length = cache["length"]
+    if cfg.mrope:
+        # the serving layer tracks the M-RoPE position streams
+        positions = batch.get("positions3")
+        if positions is None:
+            positions = jnp.broadcast_to(length, (B, 1, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(length, (B, 1)).astype(jnp.int32)
+    shared = params.get("shared")
+    x_embed = x if cfg.attn_every else None
+
+    if cfg.family == "hybrid":
+        # python loop over layers: avoids scan-materializing L copies of the
+        # (n_shared)-indexed shared KV caches (decode ops are tiny anyway)
+        new_cache = dict(cache)
+        ssm_new, conv_new = [], []
+        k_all, v_all = cache["k"], cache["v"]
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            h = rmsnorm(x, lp["ln1"]["scale"], cfg.norm_eps)
+            h, ssm, conv = mamba2_decode_step(h, lp["mamba"], cfg,
+                                              cache["ssm"][li], cache["conv"][li])
+            x = x + h
+            ssm_new.append(ssm)
+            conv_new.append(conv)
+            if cfg.attn_every and li % cfg.attn_every == 0:
+                inv = li // cfg.attn_every
+                cat = jnp.concatenate([x, x_embed], axis=-1)
+                h2 = rmsnorm(cat, shared["ln_in"]["scale"], cfg.norm_eps)
+                a, kc, vc = attention_decode_block(
+                    h2, shared["attn"], cfg, positions, k_all[inv], v_all[inv],
+                    length)
+                x = x + a
+                h3 = rmsnorm(x, shared["ln_mlp"]["scale"], cfg.norm_eps)
+                x = x + mlp_block(h3, shared["mlp"], cfg)
+                k_all = k_all.at[inv].set(kc)
+                v_all = v_all.at[inv].set(vc)
+        new_cache.update(
+            ssm=jnp.stack(ssm_new), conv=jnp.stack(conv_new),
+            k=k_all, v=v_all, length=length + 1)
+        logits = _logits(params, x, cfg)
+        return logits, new_cache
+
+    # per-layer cache slices become scan xs; updated slices are scan ys
+    layer_keys = [k for k in cache.keys() if k != "length"]
+
+    def body(carry, inp):
+        xx = carry
+        lp, lc, li = inp
+        xx, nc = decode_layer_step(lp, xx, cfg, lc, length, positions, li)
+        return xx, nc
+
+    lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    per_layer_cache = {k: cache[k] for k in layer_keys}
+    xs = (params["layers"], per_layer_cache, lidx)
+    x, new_caches = jax.lax.scan(body, x, xs)
+
+    new_cache = dict(cache)
+    for k in layer_keys:
+        new_cache[k] = new_caches[k]
+    new_cache["length"] = length + 1
+    logits = _logits(params, x, cfg)
+    return logits, new_cache
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            max_len: int) -> Tuple[Params, jax.Array]:
+    """Inference prefill: full forward building the KV cache; returns
+    (cache, last-position logits).  For SSM/hybrid archs the recurrent states
+    come out of the scan-form blocks."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    B, S = x.shape[:2]
+    cache = make_cache(cfg, B, max_len)
+    cache["length"] = jnp.asarray(S, jnp.int32)
+
+    if cfg.rwkv:
+        def body(carry, lp):
+            xx = carry
+            h = rmsnorm(xx, lp["ln1"]["scale"], cfg.norm_eps)
+            zero = jnp.zeros((B, 1, cfg.d_model), xx.dtype)
+            h, wkv, tm_x = rwkv6_time_mix(h, zero, lp, cfg)
+            xx = xx + h
+            h2 = rmsnorm(xx, lp["ln2"]["scale"], cfg.norm_eps)
+            h2, cm_x = rwkv6_channel_mix(h2, zero, lp, cfg)
+            xx = xx + h2
+            return xx, {"wkv": wkv, "tm_x": tm_x.astype(jnp.bfloat16),
+                        "cm_x": cm_x.astype(jnp.bfloat16)}
+
+        x_out, states = jax.lax.scan(body, x, params["layers"])
+        cache.update(states)
+        logits = _logits(params, x_out[:, -1:], cfg)
+        return cache, logits
+
+    if cfg.family == "hybrid":
+        # scan over layers (bounds HLO like the train backbone); the shared
+        # attention block runs under lax.cond, emitting its fresh K/V when it
+        # fires and zeros otherwise — the per-invocation caches are gathered
+        # from the emitted stack afterwards.
+        shared = params.get("shared")
+        x_embed = x
+        K, hd = cfg.n_kv_heads, cfg.hd
+
+        def body(carry, inp):
+            xx = carry
+            lp, li = inp
+            h = rmsnorm(xx, lp["ln1"]["scale"], cfg.norm_eps)
+            out, (ssm, conv) = mamba2_block(h, lp["mamba"], cfg,
+                                            return_state=True)
+            xx = xx + out
+
+            def apply_shared(xx):
+                cat = jnp.concatenate([xx, x_embed], axis=-1)
+                h2 = rmsnorm(cat, shared["ln_in"]["scale"], cfg.norm_eps)
+                q, k, v = _qkv(h2, shared["attn"], cfg)
+                q, k = _position_encode(q, k, positions, cfg)
+                if cfg.attn_impl == "naive":
+                    from .layers import naive_causal_attention
+                    o = naive_causal_attention(q, k, v, cfg)
+                else:
+                    o = chunked_causal_attention(q, k, v, cfg)
+                xx = xx + o.reshape(B, S, -1) @ shared["attn"]["wo"]
+                h3 = rmsnorm(xx, shared["ln_mlp"]["scale"], cfg.norm_eps)
+                xx = xx + mlp_block(h3, shared["mlp"], cfg)
+                return xx, k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+            def skip(xx):
+                z = jnp.zeros((B, S, K, hd), jnp.bfloat16)
+                return xx, z, z
+
+            xx, k, v = jax.lax.cond(li % cfg.attn_every == 0, apply_shared,
+                                    skip, xx)
+            return xx, {"ssm": ssm, "conv": conv.astype(jnp.bfloat16),
+                        "k": k, "v": v}
+
+        lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        x_out, states = jax.lax.scan(body, x, (params["layers"], lidx))
+        cache["ssm"] = states["ssm"]
+        cache["conv"] = states["conv"]
+        inv_idx = jnp.arange(cfg.n_shared_attn) * cfg.attn_every
+        pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+        cache["k"] = jnp.pad(states["k"][inv_idx], pad)
+        cache["v"] = jnp.pad(states["v"][inv_idx], pad)
+        logits = _logits(params, x_out[:, -1:], cfg)
+        return cache, logits
+
+    # attention families: forward while stashing K/V per layer
+    def body(carry, lp):
+        xx = carry
+        h = rmsnorm(xx, lp["ln1"]["scale"], cfg.norm_eps)
+        q, k, v = _qkv(h, lp["attn"], cfg)
+        q, k = _position_encode(q, k, positions, cfg)
+        if cfg.attn_impl == "naive":
+            from .layers import naive_causal_attention
+            o = naive_causal_attention(q, k, v, cfg)
+        else:
+            o = chunked_causal_attention(q, k, v, cfg)
+        xx = xx + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        h = rmsnorm(xx, lp["ln2"]["scale"], cfg.norm_eps)
+        if cfg.is_moe:
+            m, _ = moe_block(h, lp["moe"], cfg)
+        else:
+            m = mlp_block(h, lp["mlp"], cfg)
+        xx = xx + m
+        return xx, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+    x_out, kv = jax.lax.scan(body, x, params["layers"])
+    pad5 = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+    if cfg.kv_quant:
+        from .layers import quantize_kv
+        kq, ks = quantize_kv(kv["k"])
+        vq, vs = quantize_kv(kv["v"])
+        cache["k"] = jnp.pad(kq, pad5)
+        cache["v"] = jnp.pad(vq, pad5)
+        pad4 = ((0, 0), (0, 0), (0, max_len - S), (0, 0))
+        cache["k_scale"] = jnp.pad(ks, pad4)
+        cache["v_scale"] = jnp.pad(vs, pad4)
+    else:
+        cache["k"] = jnp.pad(kv["k"], pad5)
+        cache["v"] = jnp.pad(kv["v"], pad5)
+    logits = _logits(params, x_out[:, -1:], cfg)
+    return cache, logits

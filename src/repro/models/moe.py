@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: top-k softmax gating with capacity-based
+dispatch (GShard-style cumsum positioning), experts laid out for expert
+parallelism over the ``model`` mesh axis.
+
+Dispatch is scatter-based (no (T, E*C) one-hot einsum — that is quadratic in
+tokens) and drop-based: per-expert capacity C = ceil(T*k/E) * capacity_factor;
+overflow tokens fall through the residual connection (standard Switch/GShard
+semantics).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from .config import ModelConfig
+from .layers import ParamSpec, Specs
+
+
+def moe_specs(cfg: ModelConfig) -> Specs:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, E), ("embed", None), fan_in=d),
+        "wi_gate": ParamSpec((E, d, f), ("expert", "embed", "mlp"), fan_in=d),
+        "wi_up": ParamSpec((E, d, f), ("expert", "embed", "mlp"), fan_in=d),
+        "wo": ParamSpec((E, f, d), ("expert", "mlp", "embed"), fan_in=f),
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)  # pad to a lane-friendly multiple
+
+
+def moe_block(x: jax.Array, p: Dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  Also returns aux load-balancing loss via
+    ``moe_block.aux`` convention is avoided — the aux loss is recomputed in
+    the train loss from the router logits if needed; here we fold it in by
+    returning (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    C = capacity(cfg, T)
+    flat_e = expert_idx.reshape(T * k)                        # (T*k,)
+    flat_g = gate_vals.reshape(T * k).astype(x.dtype)
+    tok_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    # position of each assignment within its expert, via stable sort ranking.
+    # (The textbook one-hot cumsum costs 1.6e14 FLOPs/device at 1M tokens
+    # under GSPMD — XLA lowers the partitioned (T*k, E) cumsum to a
+    # pathological reduce-window; the sort computes identical positions at
+    # 2.6e8 FLOPs/device.  EXPERIMENTS.md §Perf H1.)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=jnp.int32))
+    seg_pos = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(seg_pos)
+    # keep the index vectors batch-sharded so the dispatch scatter / combine
+    # gather partition their index grids instead of replicating them
+    flat_e = constrain(flat_e, ("batch",))
+    pos = constrain(pos, ("batch",))
+    keep = pos < C
+    # scatter tokens into (E, C, d) buffers; dropped rows scatter to a
+    # sacrificial slot C (buffer allocated C+1 then trimmed).
+    # `tok_of` is repeat(arange(T), k) — CONTIGUOUS — so the token gather is
+    # a broadcast+reshape, not a real gather (a gather here makes the SPMD
+    # partitioner materialize and all-gather a u32[T*k, d] index grid: 2x51GB
+    # per layer measured — EXPERIMENTS.md §Perf H1 iter 3).
+    slot = jnp.where(keep, pos, C)
+    rows = jnp.broadcast_to(xt[:, None, :], (T, k, d)).reshape(T * k, d)
+    rows = constrain(rows, ("batch", None))                   # (T*k, d)
+    buf = jnp.zeros((E, C + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].set(rows)
+    buf = buf[:, :C]
+    # pin the dispatch buffer and expert intermediates to expert parallelism:
+    # without the constraint GSPMD loses the sharding through the scatter and
+    # replicates the expert compute (measured 30x FLOP blowup — EXPERIMENTS.md
+    # §Perf H1)
+    buf = constrain(buf, ("expert", None, None))
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"]).astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    h = constrain(g.astype(x.dtype) * u, ("expert", None, "mlp"))
+    out_buf = constrain(jnp.einsum("ecf,efd->ecd", h, p["wo"]),
+                        ("expert", None, None))               # (E, C, d)
+
+    # gather back and combine with gates (return exchange, batch-sharded);
+    # the per-token top-k sum is a reshape+sum, NOT a scatter-add (same u32
+    # index-grid pathology as above)
+    picked = constrain(out_buf[flat_e, jnp.clip(slot, 0, C - 1)],
+                       ("batch", None))                       # (T*k, d)
+    picked = jnp.where(keep[:, None], picked, 0).astype(x.dtype)
+    y = (picked * flat_g[:, None]).reshape(T, k, d).sum(axis=1)
+    y = constrain(y, ("batch", None))
+    return y.reshape(B, S, d), aux

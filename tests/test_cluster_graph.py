@@ -1,0 +1,75 @@
+"""ClusterGraph (Algorithm 1) vs the brute-force path oracle + paper examples."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (ClusterGraph, MATCH, NON_MATCH, deduce_bruteforce)
+
+
+def test_paper_example_1():
+    """§2.2 Example 1: the seven labeled pairs of Figure 2."""
+    g = ClusterGraph(7)
+    g.add_labels([(0, 1, MATCH), (2, 3, MATCH), (3, 4, MATCH),
+                  (0, 5, NON_MATCH), (1, 2, NON_MATCH), (2, 6, NON_MATCH),
+                  (4, 5, NON_MATCH)])
+    assert g.deduce(2, 4) == MATCH          # (o3,o5): path of matches
+    assert g.deduce(4, 6) == NON_MATCH      # (o5,o7): one non-matching edge
+    assert g.deduce(0, 6) is None           # (o1,o7): every path has >=2 N
+
+
+def test_paper_example_3():
+    """§3.2 Example 3: p8=(o5,o6) deduced non-matching from p1..p7."""
+    # objects 0..5 = o1..o6 from Figure 3
+    g = ClusterGraph(6)
+    g.add_labels([(1, 2, MATCH), (0, 1, MATCH), (0, 5, NON_MATCH),
+                  (3, 4, MATCH), (3, 5, NON_MATCH), (1, 3, NON_MATCH)])
+    assert g.deduce(4, 5) == NON_MATCH
+
+
+@st.composite
+def labeled_world(draw):
+    """A transitively-consistent labeled pair set: labels derive from a
+    ground-truth entity partition."""
+    n = draw(st.integers(3, 10))
+    entities = draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+    m = draw(st.integers(1, min(12, n * (n - 1) // 2)))
+    pairs = []
+    seen = set()
+    for _ in range(m):
+        a = draw(st.integers(0, n - 1))
+        b = draw(st.integers(0, n - 1))
+        if a == b or (min(a, b), max(a, b)) in seen:
+            continue
+        seen.add((min(a, b), max(a, b)))
+        lab = MATCH if entities[a] == entities[b] else NON_MATCH
+        pairs.append((a, b, lab))
+    return n, pairs
+
+
+@given(labeled_world())
+def test_deduce_matches_bruteforce(world):
+    """ClusterGraph deduction == exhaustive <=1-neg-edge path search."""
+    n, pairs = world
+    g = ClusterGraph(n)
+    g.add_labels(pairs)
+    assert g.n_conflicts == 0
+    for a in range(n):
+        for b in range(a + 1, n):
+            assert g.deduce(a, b) == deduce_bruteforce(n, pairs, a, b), \
+                (pairs, a, b)
+
+
+def test_conflicts_counted_not_applied():
+    g = ClusterGraph(3)
+    assert g.add_label(0, 1, MATCH)
+    assert not g.add_label(0, 1, NON_MATCH)    # contradiction dropped
+    assert g.n_conflicts == 1
+    assert g.deduce(0, 1) == MATCH
+
+
+def test_union_merges_negative_adjacency():
+    g = ClusterGraph(5)
+    g.add_labels([(0, 1, MATCH), (2, 3, MATCH), (1, 2, NON_MATCH)])
+    # now merge cluster{0,1} with 4: neg edge must follow the merged root
+    g.add_label(0, 4, MATCH)
+    assert g.deduce(4, 3) == NON_MATCH

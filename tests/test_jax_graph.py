@@ -1,0 +1,96 @@
+"""TPU-native engine vs the Python oracle (DESIGN.md §4 adaptation)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (ClusterGraph, MATCH, NEG, NON_MATCH, POS, PairSet,
+                        UNKNOWN, boruvka_frontier, connected_components,
+                        deduce_batch, get_order, label_parallel_jax, neg_keys,
+                        parallel_crowdsourced_pairs)
+
+
+@st.composite
+def edge_world(draw):
+    n = draw(st.integers(3, 12))
+    entities = [draw(st.integers(0, 3)) for _ in range(n)]
+    all_edges = list(itertools.combinations(range(n), 2))
+    m = draw(st.integers(2, min(14, len(all_edges))))
+    idx = draw(st.permutations(range(len(all_edges))))
+    edges = [all_edges[i] for i in idx[:m]]
+    labels = [entities[a] == entities[b] for a, b in edges]
+    return n, edges, labels
+
+
+@given(edge_world())
+def test_connected_components_vs_union_find(world):
+    n, edges, labels = world
+    u = jnp.array([e[0] for e in edges], jnp.int32)
+    v = jnp.array([e[1] for e in edges], jnp.int32)
+    mask = jnp.array(labels)
+    roots = np.asarray(connected_components(u, v, mask, n))
+    g = ClusterGraph(n)
+    for (a, b), m in zip(edges, labels):
+        if m:
+            g.add_label(a, b, MATCH)
+    for a in range(n):
+        for b in range(n):
+            assert (roots[a] == roots[b]) == g.connected(a, b)
+
+
+@given(edge_world())
+def test_deduce_batch_vs_oracle(world):
+    n, edges, labels = world
+    u = jnp.array([e[0] for e in edges], jnp.int32)
+    v = jnp.array([e[1] for e in edges], jnp.int32)
+    pos_mask = jnp.array(labels)
+    roots = connected_components(u, v, pos_mask, n)
+    sneg = neg_keys(roots, u, v, ~pos_mask, n)
+    g = ClusterGraph(n)
+    for (a, b), m in zip(edges, labels):
+        g.add_label(a, b, MATCH if m else NON_MATCH)
+    qa, qb = np.meshgrid(np.arange(n), np.arange(n))
+    got = np.asarray(deduce_batch(roots, sneg, jnp.asarray(qa.ravel()),
+                                  jnp.asarray(qb.ravel()), n)).reshape(n, n)
+    for a in range(n):
+        for b in range(n):
+            if a == b:
+                continue
+            want = g.deduce(a, b)
+            want_code = {MATCH: POS, NON_MATCH: NEG, None: UNKNOWN}[want]
+            assert got[a, b] == want_code, (a, b, edges, labels)
+
+
+@given(edge_world())
+def test_boruvka_round1_exact_parity(world):
+    """With no labels (iteration 1) the Borůvka frontier equals the
+    sequential scan's selection exactly (priority-Kruskal forest)."""
+    n, edges, _ = world
+    P = len(edges)
+    u = np.array([e[0] for e in edges], np.int32)
+    v = np.array([e[1] for e in edges], np.int32)
+    ps = PairSet(u, v, np.linspace(1, 0.5, P).astype(np.float32),
+                 np.zeros(P, bool), n_objects=n)
+    oracle = set(parallel_crowdsourced_pairs(ps, np.arange(P), {}))
+    fr = boruvka_frontier(jnp.asarray(u), jnp.asarray(v),
+                          jnp.full((P,), UNKNOWN, jnp.int32),
+                          jnp.zeros((P,), bool), n)
+    assert set(np.nonzero(np.asarray(fr))[0].tolist()) == oracle
+
+
+@given(edge_world())
+def test_jax_engine_full_run_correct_and_no_worse(world):
+    """Full engine run: labels == truth; crowdsourced count <= oracle's
+    sequential count + small slack (the engine uses position-free labeled
+    evidence, which can only help per DESIGN.md §4)."""
+    n, edges, labels = world
+    P = len(edges)
+    u = np.array([e[0] for e in edges], np.int32)
+    v = np.array([e[1] for e in edges], np.int32)
+    truth_arr = np.where(np.array(labels), POS, NEG).astype(np.int32)
+    out, crowdsourced, rounds = label_parallel_jax(
+        u, v, n, lambda idx: truth_arr[idx])
+    assert (out == truth_arr).all()
+    assert crowdsourced.sum() <= P

@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode
+(the kernels target TPU; interpret executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.pair_scores.ops import l2_normalize, pair_scores
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# pair_scores
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("N,M,D", [(256, 256, 128), (512, 384, 64),
+                                   (300, 200, 96), (128, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pair_scores_sweep(N, M, D, dtype):
+    a = jnp.asarray(RNG.normal(size=(N, D)), dtype)
+    b = jnp.asarray(RNG.normal(size=(M, D)), dtype)
+    s, c = pair_scores(a, b, 0.2, impl="interpret")
+    sr, cr = pair_scores(a, b, 0.2, impl="ref")
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=tol)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+
+
+def test_pair_scores_counts_match_threshold_semantics():
+    a = jnp.asarray(RNG.normal(size=(128, 64)), jnp.float32)
+    s, c = pair_scores(a, a, 0.5, impl="interpret")
+    # self-similarity of normalized rows is 1.0 -> every row has >= 1 cand
+    assert (np.asarray(c)[:, 0] >= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,K,d", [
+    (2, 256, 4, 4, 64),     # MHA
+    (1, 512, 8, 2, 128),    # GQA 4:1, d=128
+    (2, 384, 6, 3, 64),     # GQA 2:1, non-pow2 S
+    (1, 128, 2, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, K, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, S, H, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, K, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, K, d)), dtype)
+    o = flash_attention(q, k, v, impl="interpret")
+    r = flash_attention(q, k, v, impl="ref")
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    q = jnp.asarray(RNG.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    o1 = flash_attention(q, k, v, impl="interpret", bq=128, bk=128)
+    o2 = flash_attention(q, k, v, impl="interpret", bq=64, bk=256)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,K,d,length", [
+    (2, 1024, 8, 2, 64, 700),
+    (1, 2048, 4, 4, 128, 2048),
+    (3, 512, 6, 2, 64, 1),
+    (2, 512, 8, 8, 64, 311),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, S, H, K, d, length, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, H, d)), dtype)
+    kc = jnp.asarray(RNG.normal(size=(B, S, K, d)), dtype)
+    vc = jnp.asarray(RNG.normal(size=(B, S, K, d)), dtype)
+    o = decode_attention(q, kc, vc, jnp.int32(length), impl="interpret")
+    r = decode_attention(q, kc, vc, jnp.int32(length), impl="ref")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_decode_attention_ignores_tail_garbage():
+    """Entries past `length` must not affect the result."""
+    B, S, H, K, d = 1, 512, 4, 2, 64
+    q = jnp.asarray(RNG.normal(size=(B, H, d)), jnp.float32)
+    kc = jnp.asarray(RNG.normal(size=(B, S, K, d)), jnp.float32)
+    vc = jnp.asarray(RNG.normal(size=(B, S, K, d)), jnp.float32)
+    o1 = decode_attention(q, kc, vc, jnp.int32(100), impl="interpret")
+    kc2 = kc.at[:, 100:].set(1e9)
+    vc2 = vc.at[:, 100:].set(-1e9)
+    o2 = decode_attention(q, kc2, vc2, jnp.int32(100), impl="interpret")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

@@ -1,0 +1,115 @@
+"""Sharding rules: divisibility fallback, axis-collision avoidance, and a
+small-mesh lower+compile of the real train step (subprocess, 8 devices)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+
+def test_spec_for_divisibility_fallback():
+    import os
+    # pure logic — works on the single-device mesh by using extents of 1? No:
+    # spec_for needs a mesh; use a subprocess-free fake via make_host_mesh(1,1)
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import RULE_SETS, spec_for
+    mesh = make_host_mesh(1, 1)
+    rules = RULE_SETS["fsdp_tp"]
+    # extents are 1 -> everything shards trivially; the real divisibility
+    # paths are exercised in the subprocess test below and by the dry-run.
+    spec = spec_for(mesh, ("vocab", "embed"), (100, 64), rules)
+    assert len(spec) == 2
+
+
+SUB = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import RULE_SETS, spec_for, sharding_tree, batch_sharding
+    from repro.configs import get
+    from repro.configs.shapes import input_specs
+    from repro.launch.dryrun import lower_full, collective_bytes, cost_summary
+
+    mesh = make_host_mesh(4, 2)
+    rules = RULE_SETS["fsdp_tp"]
+
+    # divisibility fallback: vocab 49155 % 2 != 0 -> replicated dim
+    spec = spec_for(mesh, ("vocab", "embed"), (49155, 64), rules)
+    assert spec[0] is None, spec
+    # kv heads that don't divide fall back
+    spec = spec_for(mesh, ("batch", None), (7, 3), rules)
+    assert spec[0] is None, spec
+    # mesh-axis collision: same axis can't shard two dims
+    spec = spec_for(mesh, ("mlp", "qheads"), (8, 8), rules)
+    assert (spec[0] is None) or (spec[1] is None)
+
+    # real lower+compile of a reduced arch on the 4x2 mesh
+    cfg = get("internlm2-1.8b").reduced()
+    import repro.launch.dryrun as D
+    import repro.configs.shapes as S
+    # shrink the shape so CPU compile is fast
+    S.SHAPES["train_4k"] = S.Shape("train_4k", 256, 8, "train")
+    compiled, lowered, fallbacks, secs = lower_full(cfg, "train_4k", mesh, "fsdp_tp")
+    c = cost_summary(compiled)
+    assert c["flops"] > 0
+    print("SHARDING_OK", c["flops"], len(fallbacks))
+""")
+
+
+def test_small_mesh_lower_compile():
+    r = subprocess.run([sys.executable, "-c", SUB], capture_output=True,
+                       text=True, cwd=str(Path(__file__).parent.parent),
+                       timeout=900)
+    assert "SHARDING_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+
+
+SUB_A2A = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, math
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.configs import get
+    from repro.models.moe import moe_block
+    from repro.models.moe_a2a import moe_block_a2a
+    from repro.models import model as MM
+    from repro.sharding import set_current_mesh
+
+    mesh = make_host_mesh(2, 4)
+    set_current_mesh(mesh, "fsdp_tp")
+    cfg = get("olmoe-1b-7b").reduced().replace(capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    specs = {k: v for k, v in MM.layer_specs(cfg).items() if k.startswith("moe/")}
+    flat = {}
+    for i, (k, v) in enumerate(sorted(specs.items())):
+        kk = jax.random.fold_in(key, i)
+        scale = 1.0 / math.sqrt(max(v.fan_in, 1))
+        flat[k] = (jax.random.normal(kk, v.shape, jnp.float32) * scale).astype(v.dtype)
+    p = MM._nest(flat)["moe"]
+    x = (jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model)) * 0.5
+         ).astype(jnp.bfloat16)
+    y1, _ = moe_block(x, p, cfg)
+    y2, _ = moe_block_a2a(x, p, cfg, mesh)
+    d = float(jnp.abs(y1.astype(jnp.float32) - y2.astype(jnp.float32)).max())
+    assert d < 1e-5, d
+    g1 = jax.grad(lambda xx: jnp.sum(moe_block(xx, p, cfg)[0].astype(jnp.float32)))(x)
+    g2 = jax.grad(lambda xx: jnp.sum(moe_block_a2a(xx, p, cfg, mesh)[0].astype(jnp.float32)))(x)
+    dg = float(jnp.abs(g1.astype(jnp.float32) - g2.astype(jnp.float32)).max())
+    assert dg < 1e-5, dg
+    print("A2A_OK")
+""")
+
+
+def test_moe_a2a_matches_gspmd():
+    """shard_map all-to-all MoE == reference MoE (fwd + grad), 8 devices."""
+    r = subprocess.run([sys.executable, "-c", SUB_A2A], capture_output=True,
+                       text=True, cwd=str(Path(__file__).parent.parent),
+                       timeout=900)
+    assert "A2A_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-2500:]

@@ -1,0 +1,105 @@
+"""Labeling orders: Theorem 1 optimality, Lemma 2/3 swap properties, the
+exact expected-count enumerator of §4.2 (Example 4)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MATCH, PairSet, PerfectCrowd, count_crowdsourced,
+                        expected_crowdsourced, get_order, label_sequential)
+
+
+def _pairset(n, edges, liks, entities):
+    u = np.array([e[0] for e in edges], np.int32)
+    v = np.array([e[1] for e in edges], np.int32)
+    truth = np.array([entities[a] == entities[b] for a, b in edges])
+    return PairSet(u, v, np.asarray(liks, np.float32), truth, n_objects=n)
+
+
+def test_paper_example_4_expected_counts():
+    """§4.2 Example 4: E[C] for all six orders of the triangle."""
+    ps = PairSet(np.array([0, 1, 0]), np.array([1, 2, 2]),
+                 np.array([0.9, 0.4, 0.2], np.float32))
+    expect = {(0, 1, 2): 2.10, (0, 2, 1): 2.13, (1, 2, 0): 2.81,
+              (1, 0, 2): 2.10, (2, 0, 1): 2.13, (2, 1, 0): 2.81}
+    for order, val in expect.items():
+        got = expected_crowdsourced(ps, np.array(order))
+        assert got == pytest.approx(val, abs=0.01), order
+
+
+def test_paper_section_4_1_example():
+    """§4.1: p1=(o1,o2) M; p2=(o2,o3) N; p3=(o1,o3) N — C values 2,2,3,2,2,3."""
+    ents = [0, 0, 1]
+    ps = _pairset(3, [(0, 1), (1, 2), (0, 2)], [0.9, 0.5, 0.4], ents)
+    world = list(ps.truth)
+    cs = {}
+    for perm in itertools.permutations(range(3)):
+        cs[perm] = count_crowdsourced(ps, np.array(perm), world)
+    assert cs[(0, 1, 2)] == 2 and cs[(0, 2, 1)] == 2
+    assert cs[(1, 2, 0)] == 3 and cs[(1, 0, 2)] == 2
+    assert cs[(2, 0, 1)] == 2 and cs[(2, 1, 0)] == 3
+
+
+@st.composite
+def instance(draw):
+    n = draw(st.integers(3, 7))
+    entities = [draw(st.integers(0, 2)) for _ in range(n)]
+    all_edges = list(itertools.combinations(range(n), 2))
+    m = draw(st.integers(2, min(7, len(all_edges))))
+    idx = draw(st.permutations(range(len(all_edges))))
+    edges = [all_edges[i] for i in idx[:m]]
+    liks = [draw(st.floats(0.05, 0.95)) for _ in edges]
+    return _pairset(n, edges, liks, entities)
+
+
+@given(instance())
+def test_theorem1_optimal_order_minimal(ps):
+    """Matching-first is never beaten by ANY permutation (exhaustive, small)."""
+    world = list(ps.truth)
+    opt = count_crowdsourced(ps, get_order(ps, "optimal"), world)
+    for perm in itertools.permutations(range(len(ps))):
+        assert opt <= count_crowdsourced(ps, np.array(perm), world)
+
+
+@given(instance(), st.integers(0, 5))
+def test_lemma2_swap_match_earlier_never_hurts(ps, i):
+    """Swapping adjacent (non-match, match) -> (match, non-match) cannot
+    increase the crowdsourced count."""
+    world = list(ps.truth)
+    n = len(ps)
+    if i >= n - 1:
+        return
+    order = list(range(n))
+    if world[order[i]] or not world[order[i + 1]]:
+        return  # need (N, M) adjacency
+    swapped = order.copy()
+    swapped[i], swapped[i + 1] = swapped[i + 1], swapped[i]
+    assert (count_crowdsourced(ps, np.array(swapped), world)
+            <= count_crowdsourced(ps, np.array(order), world))
+
+
+@given(instance(), st.integers(0, 5))
+def test_lemma3_same_label_swap_is_neutral(ps, i):
+    """Swapping two adjacent same-label pairs never changes the count."""
+    world = list(ps.truth)
+    n = len(ps)
+    if i >= n - 1:
+        return
+    order = list(range(n))
+    if world[order[i]] != world[order[i + 1]]:
+        return
+    swapped = order.copy()
+    swapped[i], swapped[i + 1] = swapped[i + 1], swapped[i]
+    assert (count_crowdsourced(ps, np.array(swapped), world)
+            == count_crowdsourced(ps, np.array(order), world))
+
+
+@given(instance())
+def test_expected_order_close_to_optimal(ps):
+    """E[C(likelihood-desc)] <= E[C(random)] on average is the paper's
+    heuristic claim; here we only require the enumerator is consistent:
+    E[C] of any order lies between min and max over worlds."""
+    order = get_order(ps, "expected")
+    e = expected_crowdsourced(ps, order)
+    assert 1.0 <= e <= len(ps)

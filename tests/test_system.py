@@ -1,0 +1,50 @@
+"""End-to-end behaviour tests for the paper's system: the full hybrid
+human-machine crowdsourced-join pipeline."""
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, NoisyCrowd, PerfectCrowd,
+                        crowdsourced_join)
+
+
+def test_join_end_to_end_perfect_crowd(paper_ds):
+    cand = paper_ds.pairs.above(0.3)
+    res = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                            labeler="parallel",
+                            total_true_matches=paper_ds.total_true_matches)
+    # perfect crowd + transitivity => perfect labels on the candidate set
+    assert res.quality.precision == 1.0
+    assert res.quality.recall > 0.9          # limited only by the threshold
+    # the paper's headline: ~95% of pairs deduced, few iterations
+    assert res.n_deduced / len(cand) > 0.9
+    assert res.n_iterations <= 20
+    assert res.n_hits == CostModel().n_hits(res.n_crowdsourced)
+
+
+def test_join_transitive_saving_product(product_ds):
+    cand = product_ds.pairs.above(0.2)
+    res = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                            labeler="parallel")
+    saving = res.n_deduced / len(cand)
+    assert 0.05 < saving < 0.6               # paper: ~20-26% at th=0.2
+
+
+def test_join_noisy_crowd_quality_loss_is_small(paper_ds):
+    cand = paper_ds.pairs.above(0.3)
+    noisy = crowdsourced_join(cand, NoisyCrowd(error_rate=0.08, seed=0),
+                              order="expected", labeler="parallel",
+                              total_true_matches=paper_ds.total_true_matches)
+    base = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                             labeler="parallel",
+                             total_true_matches=paper_ds.total_true_matches)
+    assert noisy.quality.f_measure > base.quality.f_measure - 0.10
+
+
+def test_join_jax_engine_end_to_end(product_ds):
+    cand = product_ds.pairs.above(0.3)
+    res = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                            labeler="jax")
+    assert (res.labels == cand.truth).all()
+    ref = crowdsourced_join(cand, PerfectCrowd(), order="expected",
+                            labeler="parallel")
+    assert abs(res.n_crowdsourced - ref.n_crowdsourced) < 0.05 * len(cand)
