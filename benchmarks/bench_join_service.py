@@ -1,0 +1,92 @@
+"""Scale-out join pipeline throughput (DESIGN.md §7).
+
+Two stages, benchmarked separately:
+
+* machine phase — pairs-scored/s through the sharded candidate driver
+  (dense grid scored + thresholded + compacted on device);
+* human phase — sessions/s through the lane-batched ``JoinService``
+  (frontier -> crowd -> deduce rounds over stacked sessions).
+
+Besides the harness CSV rows, emits one ``# JSON`` line with the raw
+numbers for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import PerfectCrowd
+
+from .common import dataset, row, timed
+
+
+def _bench_machine_phase(out: list, payload: dict) -> None:
+    import jax.numpy as jnp
+
+    from repro.kernels.pair_scores.sharded import sharded_candidates
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(0)
+    N, M, D = 2048, 2048, 64
+    # entity-clustered embeddings so thresholding yields real candidates
+    cents = rng.normal(size=(256, D))
+    a = cents[rng.integers(0, 256, N)] + 0.3 * rng.normal(size=(N, D))
+    b = cents[rng.integers(0, 256, M)] + 0.3 * rng.normal(size=(M, D))
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    mesh = make_host_mesh(1, 1)
+    # compile + warm up, then time
+    sharded_candidates(a, b, 0.6, mesh, capacity=N * M // 4)
+    reps = 3
+    with timed() as t:
+        for _ in range(reps):
+            cand = sharded_candidates(a, b, 0.6, mesh, capacity=N * M // 4)
+    us = t["us"] / reps
+    pairs_per_s = N * M / (us / 1e6)
+    payload["machine"] = {
+        "n": N, "m": M, "d": D, "us_per_call": us,
+        "pairs_scored_per_s": pairs_per_s, "candidates": len(cand),
+        "dropped": cand.n_dropped,
+    }
+    out.append(row("join_service/machine_2048x2048", us,
+                   f"pairs_per_s={pairs_per_s:.3e} cands={len(cand)}"))
+
+
+def _bench_human_phase(out: list, payload: dict) -> None:
+    from repro.serve.join_service import JoinService
+
+    cases = [("paper", 0.3), ("paper", 0.4), ("product", 0.3),
+             ("product", 0.45), ("paper", 0.5), ("product", 0.35)]
+    svc = JoinService(lanes=3)
+    rids = []
+    for name, tau in cases:
+        ds = dataset(name)
+        rids.append(svc.submit(ds.pairs.above(tau), PerfectCrowd(),
+                               total_true_matches=ds.total_true_matches))
+    t0 = time.perf_counter()
+    res = svc.run()
+    secs = time.perf_counter() - t0
+    n_pairs = sum(len(res[r].labels) for r in rids)
+    n_crowd = sum(res[r].n_crowdsourced for r in rids)
+    sessions_per_s = len(cases) / secs
+    payload["human"] = {
+        "sessions": len(cases), "lanes": 3, "secs": secs,
+        "sessions_per_s": sessions_per_s, "pairs_labeled": n_pairs,
+        "crowdsourced": n_crowd,
+        "saved_frac": 1.0 - n_crowd / max(n_pairs, 1),
+    }
+    out.append(row(
+        "join_service/sessions_6x3lanes", secs * 1e6 / len(cases),
+        f"sessions_per_s={sessions_per_s:.2f} pairs={n_pairs} "
+        f"crowdsourced={n_crowd} saved={1 - n_crowd / max(n_pairs, 1):.0%}"))
+
+
+def run() -> list:
+    out: list = []
+    payload: dict = {}
+    _bench_machine_phase(out, payload)
+    _bench_human_phase(out, payload)
+    out.append("# JSON " + json.dumps({"bench_join_service": payload}))
+    return out

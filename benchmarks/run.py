@@ -7,12 +7,12 @@ import time
 
 
 def main() -> None:
-    from . import (boruvka_parity, fig11_clusters, fig12_transitive,
-                   fig13_orders, fig14_parallel, fig16_optimizations,
-                   table1_latency, table2_quality)
+    from . import (bench_join_service, boruvka_parity, fig11_clusters,
+                   fig12_transitive, fig13_orders, fig14_parallel,
+                   fig16_optimizations, table1_latency, table2_quality)
     mods = [fig11_clusters, fig12_transitive, fig13_orders, fig14_parallel,
             fig16_optimizations, table1_latency, table2_quality,
-            boruvka_parity]
+            boruvka_parity, bench_join_service]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     t0 = time.time()

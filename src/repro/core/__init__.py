@@ -6,8 +6,10 @@ from .cluster_graph import ClusterGraph, MATCH, NON_MATCH
 from .crowd import CostModel, Crowd, LatencyModel, NoisyCrowd, PerfectCrowd
 from .deduce import deduce_bruteforce
 from .jax_graph import (NEG, POS, UNKNOWN, boruvka_frontier,
-                        connected_components, deduce_batch, label_parallel_jax,
-                        neg_keys)
+                        boruvka_frontier_batch, connected_components,
+                        connected_components_batch, deduce_batch,
+                        deduce_sessions, label_parallel_jax,
+                        label_parallel_jax_batch, neg_keys, pack_sessions)
 from .join import JoinResult, crowdsourced_join
 from .labeling import (LabelingResult, label_all_crowdsourced,
                        label_sequential)
@@ -33,5 +35,7 @@ __all__ = [
     "get_order", "ORDERS", "count_crowdsourced", "expected_crowdsourced",
     "connected_components", "deduce_batch", "neg_keys", "boruvka_frontier",
     "label_parallel_jax", "UNKNOWN", "NEG", "POS",
+    "connected_components_batch", "boruvka_frontier_batch", "deduce_sessions",
+    "pack_sessions", "label_parallel_jax_batch",
     "crowdsourced_join", "JoinResult", "quality", "Quality",
 ]

@@ -9,6 +9,12 @@ accelerator mesh instead of pointer-chasing union-find on a host:
 * ``neg_keys`` + ``deduce_batch`` — cluster-level negative edges become a
   sorted array of canonical ``lo * n + hi`` root-pair keys; "is there an edge
   between cluster(o) and cluster(o')?" is a vectorized ``searchsorted``.
+* ``*_batch`` variants (``connected_components_batch``,
+  ``boruvka_frontier_batch``, ``deduce_sessions``) — ``vmap``-stacked forms
+  that advance B independent join sessions per device dispatch, with padding
+  masks for ragged session sizes (DESIGN.md §7).  ``label_parallel_jax_batch``
+  is the multi-session driver; it matches ``label_parallel_jax`` pair-for-pair
+  on every session.
 * ``boruvka_frontier`` — the parallel re-formulation of Algorithm 3.  With
   every unlabeled pair optimistically assumed matching, the sequential scan
   selects exactly the **priority-Kruskal forest** of the candidate graph
@@ -186,6 +192,127 @@ def boruvka_frontier(
     state = (selected0, frontier0, undecided0, jnp.bool_(True))
     _, frontier, _, _ = jax.lax.while_loop(cond, round_body, state)
     return frontier
+
+
+# ---------------------------------------------------------------------------
+# Multi-session batched engine (DESIGN.md §7)
+#
+# Stacked (B, P)/(B, n) forms of the primitives above.  Sessions are padded
+# to common capacities; padded pair slots carry the self-loop (0, 0) with a
+# pre-set POS label, which is inert in every primitive: the union hook
+# parent[0] <- parent[0] is a no-op, POS slots never enter a frontier, and a
+# same-root pair never produces a negative key.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def connected_components_batch(u: jax.Array, v: jax.Array, mask: jax.Array,
+                               n_objects: int) -> jax.Array:
+    """(B, P) edge lists -> (B, n_objects) roots, one dispatch for B sessions."""
+    return jax.vmap(
+        lambda uu, vv, mm: connected_components(uu, vv, mm, n_objects)
+    )(u, v, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def boruvka_frontier_batch(u: jax.Array, v: jax.Array, labels: jax.Array,
+                           published: jax.Array, n_objects: int) -> jax.Array:
+    """(B, P) stacked sessions -> (B, P) bool frontier masks.
+
+    The vmapped ``while_loop`` iterates until every session's frontier
+    converges; already-converged sessions are held fixed by the batching
+    rule, so per-session results equal the unbatched ``boruvka_frontier``.
+    """
+    return jax.vmap(
+        lambda uu, vv, ll, pp: boruvka_frontier(uu, vv, ll, pp, n_objects)
+    )(u, v, labels, published)
+
+
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def deduce_sessions(u: jax.Array, v: jax.Array, labels: jax.Array,
+                    n_objects: int) -> jax.Array:
+    """One deduction sweep over B stacked sessions: every UNKNOWN pair whose
+    label follows from the POS/NEG evidence is filled in.  Returns the
+    updated (B, P) label array."""
+
+    def one(uu, vv, ll):
+        roots = connected_components(uu, vv, ll == POS, n_objects)
+        sneg = neg_keys(roots, uu, vv, ll == NEG, n_objects)
+        ded = deduce_batch(roots, sneg, uu, vv, n_objects)
+        return jnp.where(ll == UNKNOWN, ded, ll)
+
+    return jax.vmap(one)(u, v, labels)
+
+
+def pack_sessions(sessions, pair_capacity: int = 0, object_capacity: int = 0):
+    """Pack ragged sessions [(u, v, n_objects), ...] into stacked arrays.
+
+    Returns (U, V, labels0, valid) with shapes (B, P_cap) / (B, P_cap);
+    padded slots hold the inert pre-labeled POS self-loop (0, 0)."""
+    B = len(sessions)
+    p_cap = max(pair_capacity, max(len(u) for u, _, _ in sessions))
+    U = np.zeros((B, p_cap), np.int32)
+    V = np.zeros((B, p_cap), np.int32)
+    labels0 = np.full((B, p_cap), POS, np.int32)
+    valid = np.zeros((B, p_cap), bool)
+    for b, (u, v, _) in enumerate(sessions):
+        p = len(u)
+        U[b, :p] = u
+        V[b, :p] = v
+        labels0[b, :p] = UNKNOWN
+        valid[b, :p] = True
+    n_cap = max(object_capacity, max(n for _, _, n in sessions))
+    return U, V, labels0, valid, n_cap
+
+
+def label_parallel_jax_batch(
+    sessions,
+    crowd_fn,
+    pair_capacity: int = 0,
+    object_capacity: int = 0,
+) -> list:
+    """Advance B independent join sessions with one device dispatch per round.
+
+    ``sessions`` — list of ``(u, v, n_objects)``; pairs already in labeling
+    order (position = priority), exactly as ``label_parallel_jax`` expects.
+    ``crowd_fn(b, idx_array) -> int32 array of {NEG, POS}`` labels session
+    ``b``'s frontier.  Optional capacities let callers pad to stable shapes
+    (one jit cache entry across waves).
+
+    Returns ``[(labels, crowdsourced_mask, round_sizes), ...]`` per session,
+    identical to running ``label_parallel_jax`` on each session alone.
+    """
+    B = len(sessions)
+    U, V, labels0, valid, n_cap = pack_sessions(
+        sessions, pair_capacity, object_capacity)
+    uj = jnp.asarray(U)
+    vj = jnp.asarray(V)
+    labels = jnp.asarray(labels0)
+    published = jnp.zeros(labels0.shape, dtype=bool)
+    crowdsourced = np.zeros(labels0.shape, dtype=bool)
+    rounds: list = [[] for _ in range(B)]
+    while bool(jnp.any(labels == UNKNOWN)):
+        frontier = np.asarray(
+            boruvka_frontier_batch(uj, vj, labels, published, n_cap))
+        if not frontier.any():
+            # everything left (in every session) is deducible
+            labels = deduce_sessions(uj, vj, labels, n_cap)
+            assert not bool(jnp.any(labels == UNKNOWN)), "engine stuck"
+            break
+        updates = np.full(labels0.shape, UNKNOWN, np.int32)
+        for b in range(B):
+            idx = np.nonzero(frontier[b])[0]
+            if len(idx) == 0:
+                continue
+            rounds[b].append(len(idx))
+            crowdsourced[b, idx] = True
+            updates[b, idx] = crowd_fn(b, idx)
+        upd = jnp.asarray(updates)
+        labels = jnp.where(upd != UNKNOWN, upd, labels)
+        labels = deduce_sessions(uj, vj, labels, n_cap)
+    labels_np = np.asarray(labels)
+    return [
+        (labels_np[b, valid[b]], crowdsourced[b, valid[b]], rounds[b])
+        for b in range(B)
+    ]
 
 
 # ---------------------------------------------------------------------------

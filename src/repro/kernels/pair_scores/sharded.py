@@ -1,0 +1,206 @@
+"""Sharded candidate generation: the pair-scores kernel across a mesh.
+
+The machine phase scores an N x M similarity grid — O(N^2) work that a
+single device cannot hold once N reaches web scale.  This driver tiles the
+grid over the 2-D (data, model) mesh of ``repro.launch.mesh``
+(DESIGN.md §7): ``a`` rows shard over ``data``, ``b`` rows shard over
+``model``, every device scores its (N/dd) x (M/dm) block with the Pallas
+kernel, and — the important part — *compacts its above-threshold candidates
+into a fixed-capacity buffer on device*.  Only candidate triples
+(row, col, score) ever cross the mesh; the dense score matrix is never
+materialized on one host.
+
+Capacity is a hard contract: a device that finds more than ``capacity``
+local candidates reports the overflow in ``n_dropped`` (callers either
+raise, re-run with a higher threshold, or grow the buffer) — never a silent
+truncation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .kernel import pair_scores as _kernel_call
+from .ops import l2_normalize
+
+
+def _mesh_extents(mesh: Mesh):
+    ext = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ext.get("data", 1), ext.get("model", 1)
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+@dataclasses.dataclass
+class ShardedCandidates:
+    """Thresholded candidates gathered from per-device compaction buffers."""
+
+    rows: np.ndarray     # (C,) int32 global row (index into a)
+    cols: np.ndarray     # (C,) int32 global col (index into b)
+    scores: np.ndarray   # (C,) float32 similarity
+    n_dropped: int       # candidates lost to per-device capacity overflow
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+
+def _local_block_scores(a_loc, b_loc, threshold: float, interpret: bool):
+    """Score one device's (n_loc, m_loc) block with the Pallas kernel,
+    handling tile-multiple padding locally (same scheme as ops.pair_scores)."""
+    from .kernel import DEFAULT_BM, DEFAULT_BN
+
+    N, M = a_loc.shape[0], b_loc.shape[0]
+    bn = min(DEFAULT_BN, N)
+    bm = min(DEFAULT_BM, M)
+    pn = (-N) % bn
+    pm = (-M) % bm
+    if pn or pm:
+        a_loc = jnp.pad(a_loc, ((0, pn), (0, 0)))
+        b_loc = jnp.pad(b_loc, ((0, pm), (0, 0)))
+    s, _ = _kernel_call(a_loc, b_loc, float(threshold), bn=bn, bm=bm,
+                        interpret=interpret)
+    return s[:N, :M]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("threshold", "capacity", "mesh",
+                                    "interpret"))
+def _sharded_candidates_jit(a, b, *, threshold: float, capacity: int,
+                            mesh: Mesh, interpret: bool):
+    dd, dm = _mesh_extents(mesh)
+    n_loc = a.shape[0] // dd
+    m_loc = b.shape[0] // dm
+
+    def body(a_loc, b_loc):
+        # a_loc: (n_loc, D) on this data-rank; b_loc: (m_loc, D) on this
+        # model-rank.  Everything below is per-device local work.
+        i0 = jax.lax.axis_index("data") * n_loc
+        j0 = jax.lax.axis_index("model") * m_loc
+        s = _local_block_scores(a_loc, b_loc, threshold, interpret)
+        mask = s >= threshold
+        flat_s = s.reshape(-1)
+        flat_m = mask.reshape(-1)
+        # stable compaction: candidate entries first, original order kept
+        order = jnp.argsort(~flat_m, stable=True)
+        take = order[:capacity]
+        got = flat_m[take]
+        rows = (i0 + take // m_loc).astype(jnp.int32)
+        cols = (j0 + take % m_loc).astype(jnp.int32)
+        n_cand = flat_m.sum().astype(jnp.int32)
+        dropped = jnp.maximum(n_cand - capacity, 0)
+        out = (
+            jnp.where(got, rows, -1)[None, None],
+            jnp.where(got, cols, -1)[None, None],
+            jnp.where(got, flat_s[take], 0.0)[None, None],
+            dropped[None, None],
+        )
+        return out
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data", None), P("model", None)),
+        out_specs=(P("data", "model", None), P("data", "model", None),
+                   P("data", "model", None), P("data", "model")),
+        check_rep=False,
+    )
+    # leading (1, 1) block axes inside the body become the global (dd, dm)
+    # device grid outside — candidate buffers only, never the dense matrix
+    return fn(a, b)
+
+
+def sharded_candidates(
+    a: jax.Array,
+    b: jax.Array,
+    threshold: float,
+    mesh: Mesh,
+    capacity: Optional[int] = None,
+    normalize: bool = True,
+    impl: str = "auto",
+) -> ShardedCandidates:
+    """Mesh-parallel machine phase: embeddings -> thresholded candidate pairs.
+
+    a: (N, D), b: (M, D); rows of ``a`` shard over the ``data`` axis, rows of
+    ``b`` over ``model``.  ``capacity`` bounds per-device candidates (default:
+    the whole local block, i.e. lossless).  Requires ``threshold > 0`` so
+    zero-padded rows can never alias a real candidate.
+    """
+    if threshold <= 0.0:
+        raise ValueError("sharded_candidates requires threshold > 0 "
+                         "(padding rows score exactly 0)")
+    dd, dm = _mesh_extents(mesh)
+    N, M = a.shape[0], b.shape[0]
+    if normalize:
+        a = l2_normalize(a)
+        b = l2_normalize(b)
+    a = _pad_rows(a, dd)
+    b = _pad_rows(b, dm)
+    n_loc = a.shape[0] // dd
+    m_loc = b.shape[0] // dm
+    cap = int(capacity) if capacity is not None else n_loc * m_loc
+    cap = min(cap, n_loc * m_loc)
+    interpret = (impl == "interpret") or (
+        impl == "auto" and jax.default_backend() != "tpu")
+    rows, cols, scores, dropped = _sharded_candidates_jit(
+        a, b, threshold=threshold, capacity=cap, mesh=mesh,
+        interpret=interpret)
+    rows = np.asarray(rows).reshape(-1)
+    cols = np.asarray(cols).reshape(-1)
+    scores = np.asarray(scores).reshape(-1)
+    keep = rows >= 0
+    # padded rows/cols score 0 < threshold, so they can't appear as candidates
+    return ShardedCandidates(
+        rows=rows[keep].astype(np.int32),
+        cols=cols[keep].astype(np.int32),
+        scores=scores[keep].astype(np.float32),
+        n_dropped=int(np.asarray(dropped).sum()),
+    )
+
+
+def sharded_pair_scores(
+    a: jax.Array,
+    b: jax.Array,
+    threshold: float,
+    mesh: Mesh,
+    normalize: bool = True,
+    impl: str = "auto",
+):
+    """Dense sharded variant for parity testing and small grids: the (N, M)
+    score matrix stays device-sharded (NamedSharding over (data, model));
+    per-row counts shard over ``data``.  Semantics match
+    ``ops.pair_scores`` exactly."""
+    dd, dm = _mesh_extents(mesh)
+    N, M = a.shape[0], b.shape[0]
+    if normalize:
+        a = l2_normalize(a)
+        b = l2_normalize(b)
+    a = _pad_rows(a, dd)
+    b = _pad_rows(b, dm)
+    interpret = (impl == "interpret") or (
+        impl == "auto" and jax.default_backend() != "tpu")
+
+    def body(a_loc, b_loc):
+        s = _local_block_scores(a_loc, b_loc, threshold, interpret)
+        cnt = (s >= threshold).sum(axis=1, keepdims=True).astype(jnp.int32)
+        cnt = jax.lax.psum(cnt, "model")
+        return s, cnt
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data", None), P("model", None)),
+        out_specs=(P("data", "model"), P("data", None)),
+        check_rep=False,
+    )
+    s, cnt = jax.jit(fn)(a, b)
+    return s[:N, :M], cnt[:N]

@@ -9,7 +9,15 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; older pins fall back to defaults
+    from jax.sharding import AxisType
+
+    def _axis_types_kw(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:  # pragma: no cover - depends on installed jax
+    def _axis_types_kw(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,14 +34,13 @@ def make_production_mesh(*, multi_pod: bool = False):
             "are visible — the dry-run launcher must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices[:ndev])
+    return jax.make_mesh(shape, axes, devices=devices[:ndev],
+                         **_axis_types_kw(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     ndev = data * model
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto),
-                         devices=jax.devices()[:ndev])
+                         devices=jax.devices()[:ndev],
+                         **_axis_types_kw(2))

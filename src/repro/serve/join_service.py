@@ -1,0 +1,265 @@
+"""JoinService — streaming join requests over the batched session engine.
+
+The serving counterpart of ``ServeEngine`` for the paper's pipeline
+(DESIGN.md §7): join requests queue up, get packed into a fixed number of
+session *lanes*, and every engine round advances all occupied lanes with one
+batched frontier dispatch + one batched deduction dispatch
+(``boruvka_frontier_batch`` / ``deduce_sessions``).  A lane whose session
+fully labels is finalized and refilled from the queue mid-wave — the same
+continuous lane-refill design ``ServeEngine`` uses for decode lanes, applied
+to join sessions.
+
+Shapes are bucketed to powers of two (pair and object capacities) so lane
+churn reuses a handful of jit cache entries instead of recompiling per
+request mix.
+
+The machine phase plugs in through :meth:`submit_embeddings`, which runs the
+mesh-sharded candidate generator (``sharded_candidates``) and feeds the
+resulting pairs straight into a session lane.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cluster_graph import MATCH
+from repro.core.crowd import CostModel, Crowd, PerfectCrowd
+from repro.core.jax_graph import (NEG, POS, UNKNOWN, boruvka_frontier_batch,
+                                  deduce_sessions, pack_sessions)
+from repro.core.metrics import Quality, quality
+from repro.core.pairs import PairSet
+from repro.core.sorting import get_order
+
+
+@dataclasses.dataclass
+class JoinRequest:
+    rid: int
+    pairs: PairSet                 # machine-phase candidates
+    crowd: Crowd
+    order: str = "expected"
+    total_true_matches: Optional[int] = None
+
+
+@dataclasses.dataclass
+class JoinSessionResult:
+    rid: int
+    labels: np.ndarray             # (P,) bool over the request's pairs
+    crowdsourced: np.ndarray       # (P,) bool
+    n_rounds: int
+    round_sizes: List[int]
+    n_hits: int
+    cost_cents: float
+    quality: Optional[Quality]
+    wall_seconds: float
+
+    @property
+    def n_crowdsourced(self) -> int:
+        return int(self.crowdsourced.sum())
+
+    @property
+    def n_deduced(self) -> int:
+        return len(self.labels) - self.n_crowdsourced
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: JoinRequest
+    perm: np.ndarray               # labeling order over the request's pairs
+    ordered: PairSet               # req.pairs.take(perm)
+    u: np.ndarray                  # (P,) int32, ordered
+    v: np.ndarray
+    n_objects: int
+    labels: np.ndarray             # (P,) int32 {UNKNOWN, NEG, POS}, ordered
+    crowdsourced: np.ndarray       # (P,) bool, ordered
+    round_sizes: List[int]
+    t0: float
+
+    @property
+    def done(self) -> bool:
+        return not (self.labels == UNKNOWN).any()
+
+
+def _bucket(n: int, floor: int = 8) -> int:
+    """Next power of two >= n (>= floor) — stable jit cache keys."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class JoinService:
+    """Accepts streaming join requests; drives frontier -> crowd -> deduce
+    rounds over up to ``lanes`` sessions per device dispatch."""
+
+    def __init__(self, lanes: int = 4, cost: Optional[CostModel] = None):
+        self.lanes = lanes
+        self.cost = cost or CostModel()
+        self.queue: Deque[JoinRequest] = collections.deque()
+        self.results: Dict[int, JoinSessionResult] = {}
+        self._next_rid = 0
+
+    # -- request ingestion ---------------------------------------------------
+    def submit(self, pairs: PairSet, crowd: Optional[Crowd] = None,
+               order: str = "expected", rid: Optional[int] = None,
+               total_true_matches: Optional[int] = None) -> int:
+        """Enqueue a join over pre-scored candidate pairs; returns the rid."""
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.queue.append(JoinRequest(rid, pairs, crowd or PerfectCrowd(),
+                                      order, total_true_matches))
+        return rid
+
+    def submit_embeddings(self, emb_a: jax.Array, emb_b: jax.Array,
+                          threshold: float, mesh,
+                          crowd: Optional[Crowd] = None,
+                          truth_fn=None, order: str = "expected",
+                          impl: str = "auto") -> int:
+        """Machine phase + enqueue: score (emb_a x emb_b) on the mesh with
+        the sharded kernel driver, keep pairs above ``threshold`` (cosine,
+        mapped to [0, 1] likelihood), and queue the session.
+
+        ``truth_fn(rows, cols) -> bool array`` attaches ground truth (for
+        simulated crowds / quality accounting).  Join keys are offset so the
+        two sides share one object universe: a-row i -> i, b-row j -> N + j.
+        """
+        from repro.kernels.pair_scores.sharded import sharded_candidates
+
+        cand = sharded_candidates(emb_a, emb_b, threshold, mesh, impl=impl)
+        if cand.n_dropped:
+            raise RuntimeError(
+                f"candidate buffers overflowed ({cand.n_dropped} dropped) — "
+                "raise capacity or threshold")
+        n_a = int(emb_a.shape[0])
+        truth = None
+        if truth_fn is not None:
+            truth = np.asarray(truth_fn(cand.rows, cand.cols), bool)
+        pairs = PairSet(
+            u=cand.rows,
+            v=cand.cols + n_a,
+            likelihood=(cand.scores + 1.0) / 2.0,
+            truth=truth,
+            n_objects=n_a + int(emb_b.shape[0]),
+        )
+        return self.submit(pairs, crowd, order)
+
+    # -- engine --------------------------------------------------------------
+    def _open_lane(self, req: JoinRequest) -> _Lane:
+        perm = get_order(req.pairs, req.order)
+        ordered = req.pairs.take(perm)
+        P = len(ordered)
+        return _Lane(
+            req=req,
+            perm=perm,
+            ordered=ordered,
+            u=np.asarray(ordered.u, np.int32),
+            v=np.asarray(ordered.v, np.int32),
+            n_objects=ordered.n_objects,
+            labels=np.full(P, UNKNOWN, np.int32),
+            crowdsourced=np.zeros(P, bool),
+            round_sizes=[],
+            t0=time.perf_counter(),
+        )
+
+    def _finalize(self, lane: _Lane) -> None:
+        req = lane.req
+        P = len(req.pairs)
+        labels = np.zeros(P, bool)
+        crowdsourced = np.zeros(P, bool)
+        labels[lane.perm] = lane.labels == POS
+        crowdsourced[lane.perm] = lane.crowdsourced
+        q = None
+        if req.pairs.truth is not None:
+            ttm = req.total_true_matches
+            if ttm is None:
+                ttm = int(req.pairs.truth.sum())
+            q = quality(req.pairs, labels, ttm)
+        n_crowd = int(crowdsourced.sum())
+        self.results[req.rid] = JoinSessionResult(
+            rid=req.rid,
+            labels=labels,
+            crowdsourced=crowdsourced,
+            n_rounds=len(lane.round_sizes),
+            round_sizes=lane.round_sizes,
+            n_hits=self.cost.n_hits(n_crowd),
+            cost_cents=self.cost.cost_cents(n_crowd),
+            quality=q,
+            wall_seconds=time.perf_counter() - lane.t0,
+        )
+
+    def _step(self, active: List[_Lane]) -> bool:
+        """One engine round over the occupied lanes: batched frontier, crowd
+        calls per lane, batched deduction sweep.  Returns True iff any lane
+        made progress (crowdsourced or deduced at least one pair)."""
+        B = len(active)
+        p_cap = _bucket(max(len(l.u) for l in active))
+        n_max = max(l.n_objects for l in active)
+        n_cap = _bucket(n_max)
+        # canonical pair keys are lo * n + hi; don't let bucketing push n_cap
+        # past the representable range when the raw size is still fine
+        key_bits = 63 if jax.config.jax_enable_x64 else 31
+        if n_cap * n_cap >= 2**key_bits:
+            n_cap = n_max
+        U, V, L, _, _ = pack_sessions(
+            [(l.u, l.v, l.n_objects) for l in active], pair_capacity=p_cap)
+        for b, lane in enumerate(active):
+            L[b, :len(lane.u)] = lane.labels
+        uj, vj = jnp.asarray(U), jnp.asarray(V)
+        lj = jnp.asarray(L)
+        published = jnp.zeros((B, p_cap), bool)
+        frontier = np.asarray(
+            boruvka_frontier_batch(uj, vj, lj, published, n_cap))
+        updates = np.full((B, p_cap), UNKNOWN, np.int32)
+        for b, lane in enumerate(active):
+            idx = np.nonzero(frontier[b])[0]
+            if len(idx) == 0:
+                continue
+            lane.round_sizes.append(len(idx))
+            lane.crowdsourced[idx] = True
+            got = np.array(
+                [POS if lane.req.crowd.ask(lane.ordered, int(i)) == MATCH
+                 else NEG for i in idx], np.int32)
+            updates[b, idx] = got
+        upd = jnp.asarray(updates)
+        lj = jnp.where(upd != UNKNOWN, upd, lj)
+        lj = deduce_sessions(uj, vj, lj, n_cap)
+        L = np.asarray(lj)
+        progress = False
+        for b, lane in enumerate(active):
+            new = L[b, :len(lane.u)]
+            progress |= (new != lane.labels).any()
+            lane.labels = new
+        return bool(progress)
+
+    def run(self) -> Dict[int, JoinSessionResult]:
+        """Drain the queue: lanes are refilled the moment a session finishes
+        (continuous batching).  Returns {rid: result} for everything served."""
+        active: List[_Lane] = []
+        while self.queue or active:
+            while self.queue and len(active) < self.lanes:
+                active.append(self._open_lane(self.queue.popleft()))
+            # zero-pair sessions are born done — finalize without a step
+            active = self._retire_done(active)
+            if not active:
+                continue
+            if not self._step(active):
+                raise RuntimeError(
+                    "join engine stuck: no frontier and nothing deducible "
+                    f"for rids {[l.req.rid for l in active]}")
+            active = self._retire_done(active)
+        return dict(self.results)
+
+    def _retire_done(self, active: List[_Lane]) -> List[_Lane]:
+        still: List[_Lane] = []
+        for lane in active:
+            if lane.done:
+                self._finalize(lane)
+            else:
+                still.append(lane)
+        return still

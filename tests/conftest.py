@@ -1,5 +1,6 @@
 import os
 import sys
+import types
 
 # tests must see the real single CPU device (the dry-run alone forces 512);
 # keep any accidental inherited flag out.
@@ -9,12 +10,71 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-settings.register_profile(
-    "ci", max_examples=30, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow])
-settings.load_profile("ci")
+try:
+    from hypothesis import HealthCheck, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade gracefully: property-based tests are skipped
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile(
+        "ci", max_examples=30, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile("ci")
+else:
+    # Install a stub ``hypothesis`` module so test files importing
+    # ``given``/``strategies`` still collect; every @given test is skipped
+    # with an actionable message instead of erroring the whole session.
+    _SKIP = pytest.mark.skip(
+        reason="hypothesis not installed — property-based test skipped "
+               "(pip install hypothesis, see pyproject.toml [test] extra)")
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            return _SKIP(fn)
+        return deco
+
+    class _Settings:
+        """Accepts every call form: @settings(...), settings.register_profile."""
+
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    class _HealthCheck:
+        too_slow = data_too_large = filter_too_much = None
+
+    def _composite(fn):
+        def strategy(*args, **kwargs):
+            return None
+        return strategy
+
+    def _any_strategy(*args, **kwargs):
+        return None
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.composite = _composite
+    _st.__getattr__ = lambda name: _any_strategy
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.HealthCheck = _HealthCheck
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,26 @@
+"""Docs invariants: every ``DESIGN.md §N`` reference in the source resolves
+to a real section of DESIGN.md."""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).parent.parent
+
+
+def test_design_md_sections_resolve():
+    design = (ROOT / "DESIGN.md").read_text()
+    sections = set(re.findall(r"^## §(\d+)", design, re.MULTILINE))
+    assert sections, "DESIGN.md has no '## §N' sections"
+    referenced = set()
+    for path in list(ROOT.rglob("src/**/*.py")) + \
+            list(ROOT.rglob("tests/*.py")) + list(ROOT.rglob("benchmarks/*.py")):
+        for n in re.findall(r"DESIGN\.md §(\d+)", path.read_text()):
+            referenced.add((n, str(path.relative_to(ROOT))))
+    assert referenced, "no DESIGN.md §N references found in source"
+    missing = [(n, p) for n, p in referenced if n not in sections]
+    assert not missing, f"dangling DESIGN.md references: {missing}"
+
+
+def test_readme_commands_reference_real_files():
+    readme = (ROOT / "README.md").read_text()
+    for rel in re.findall(r"(?:examples|benchmarks)/\w+\.py", readme):
+        assert (ROOT / rel).exists(), f"README references missing file {rel}"

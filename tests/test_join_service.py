@@ -1,0 +1,235 @@
+"""Scale-out join pipeline (DESIGN.md §7): sharded candidate generation must
+match the single-device kernel, and the batched multi-session engine must
+match the per-session engine pair-for-pair."""
+import itertools
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (NEG, POS, NoisyCrowd, PerfectCrowd, crowdsourced_join,
+                        label_parallel_jax, label_parallel_jax_batch)
+from repro.core.pairs import PairSet
+
+
+def _random_sessions(seed: int, n_sessions: int = 6):
+    """Randomized ragged join sessions with consistent ground truth."""
+    rng = np.random.default_rng(seed)
+    sessions, truths = [], []
+    for _ in range(n_sessions):
+        n = int(rng.integers(4, 16))
+        ent = rng.integers(0, 4, n)
+        all_e = list(itertools.combinations(range(n), 2))
+        m = int(rng.integers(3, min(24, len(all_e)) + 1))
+        sel = rng.permutation(len(all_e))[:m]
+        u = np.array([all_e[i][0] for i in sel], np.int32)
+        v = np.array([all_e[i][1] for i in sel], np.int32)
+        truth = np.where(ent[u] == ent[v], POS, NEG).astype(np.int32)
+        sessions.append((u, v, n))
+        truths.append(truth)
+    return sessions, truths
+
+
+# ---------------------------------------------------------------------------
+# batched multi-session engine vs per-session engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_batched_engine_matches_per_session(seed):
+    sessions, truths = _random_sessions(seed)
+    batch = label_parallel_jax_batch(
+        sessions, lambda b, idx: truths[b][idx])
+    for b, (u, v, n) in enumerate(sessions):
+        labels, cs, rounds = label_parallel_jax(
+            u, v, n, lambda idx: truths[b][idx])
+        bl, bcs, brounds = batch[b]
+        np.testing.assert_array_equal(bl, labels)
+        np.testing.assert_array_equal(bcs, cs)
+        assert brounds == rounds
+        np.testing.assert_array_equal(bl, truths[b])  # and both are correct
+
+
+def test_batched_engine_capacity_padding_is_inert():
+    """Explicit capacities (stable jit shapes) must not change any result."""
+    sessions, truths = _random_sessions(7)
+    a = label_parallel_jax_batch(sessions, lambda b, idx: truths[b][idx])
+    b = label_parallel_jax_batch(sessions, lambda b_, idx: truths[b_][idx],
+                                 pair_capacity=64, object_capacity=32)
+    for (la, ca, ra), (lb, cb, rb) in zip(a, b):
+        np.testing.assert_array_equal(la, lb)
+        np.testing.assert_array_equal(ca, cb)
+        assert ra == rb
+
+
+# ---------------------------------------------------------------------------
+# sharded pair scoring vs the single-device kernel (host-local mesh)
+# ---------------------------------------------------------------------------
+def test_sharded_pair_scores_matches_single_device():
+    from repro.kernels.pair_scores.ops import pair_scores
+    from repro.kernels.pair_scores.sharded import sharded_pair_scores
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(100, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(70, 32)), jnp.float32)
+    mesh = make_host_mesh(1, 1)
+    s1, c1 = pair_scores(a, b, 0.3, impl="interpret")
+    s2, c2 = sharded_pair_scores(a, b, 0.3, mesh, impl="interpret")
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_sharded_candidates_exact_set_and_overflow_accounting():
+    from repro.kernels.pair_scores.ops import pair_scores
+    from repro.kernels.pair_scores.sharded import sharded_candidates
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(48, 16)), jnp.float32)
+    mesh = make_host_mesh(1, 1)
+    s, _ = pair_scores(a, b, 0.4, impl="interpret")
+    want = set(zip(*np.nonzero(np.asarray(s) >= 0.4)))
+    cand = sharded_candidates(a, b, 0.4, mesh, impl="interpret")
+    assert set(zip(cand.rows.tolist(), cand.cols.tolist())) == want
+    assert cand.n_dropped == 0
+    # scores come back with the candidates
+    ref = np.asarray(s)
+    for r, c, sc in zip(cand.rows, cand.cols, cand.scores):
+        assert abs(ref[r, c] - sc) < 1e-6
+    # capacity overflow is reported, never silent
+    small = sharded_candidates(a, b, 0.4, mesh, capacity=3, impl="interpret")
+    assert small.n_dropped == len(want) - len(small)
+    with pytest.raises(ValueError):
+        sharded_candidates(a, b, -0.1, mesh)  # padding would alias tau <= 0
+
+
+SUB_MESH = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.kernels.pair_scores.ops import pair_scores
+    from repro.kernels.pair_scores.sharded import (sharded_candidates,
+                                                  sharded_pair_scores)
+
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(103, 32)), jnp.float32)  # ragged vs 4
+    b = jnp.asarray(rng.normal(size=(66, 32)), jnp.float32)   # ragged vs 2
+    mesh = make_host_mesh(4, 2)
+    s1, c1 = pair_scores(a, b, 0.3, impl="interpret")
+    s2, c2 = sharded_pair_scores(a, b, 0.3, mesh, impl="interpret")
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    cand = sharded_candidates(a, b, 0.3, mesh, impl="interpret")
+    got = set(zip(cand.rows.tolist(), cand.cols.tolist()))
+    want = set(zip(*np.nonzero(np.asarray(s1) >= 0.3)))
+    assert got == want and cand.n_dropped == 0
+    print("MESH_SHARDED_OK", len(cand))
+""")
+
+
+def test_sharded_pair_scores_8_device_mesh():
+    """Same parity on a real 4x2 host mesh (subprocess sets XLA_FLAGS)."""
+    r = subprocess.run([sys.executable, "-c", SUB_MESH], capture_output=True,
+                       text=True, cwd=str(Path(__file__).parent.parent),
+                       timeout=900)
+    assert "MESH_SHARDED_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-2500:]
+
+
+# ---------------------------------------------------------------------------
+# JoinService: lane-batched sessions == single-session joins
+# ---------------------------------------------------------------------------
+def _session_pairsets(seed: int, n_sessions: int = 5):
+    sessions, truths = _random_sessions(seed, n_sessions)
+    out = []
+    for (u, v, n), truth in zip(sessions, truths):
+        P = len(u)
+        lik = np.linspace(0.9, 0.2, P).astype(np.float32)
+        out.append(PairSet(u, v, lik, truth == POS, n_objects=n))
+    return out
+
+
+@pytest.mark.parametrize("crowd_factory", [
+    lambda: PerfectCrowd(),
+    lambda: NoisyCrowd(error_rate=0.1, seed=5),
+], ids=["perfect", "noisy"])
+def test_join_service_matches_single_session(crowd_factory):
+    from repro.serve.join_service import JoinService
+
+    pairsets = _session_pairsets(11)
+    svc = JoinService(lanes=2)  # fewer lanes than sessions -> refill path
+    rids = [svc.submit(ps, crowd_factory()) for ps in pairsets]
+    res = svc.run()
+    assert set(res) == set(rids)
+    for rid, ps in zip(rids, pairsets):
+        ref = crowdsourced_join(ps, crowd_factory(), order="expected",
+                                labeler="jax")
+        got = res[rid]
+        np.testing.assert_array_equal(got.labels, ref.labels)
+        assert got.n_crowdsourced == ref.n_crowdsourced
+        assert got.round_sizes == ref.batch_sizes
+        assert got.n_hits == ref.n_hits
+        assert got.cost_cents == ref.cost_cents
+
+
+def test_join_service_streaming_submit_between_runs():
+    from repro.serve.join_service import JoinService
+
+    pairsets = _session_pairsets(13, n_sessions=4)
+    svc = JoinService(lanes=3)
+    first = svc.submit(pairsets[0], PerfectCrowd())
+    svc.run()
+    later = [svc.submit(ps, PerfectCrowd()) for ps in pairsets[1:]]
+    res = svc.run()
+    assert set(res) == {first, *later}  # results accumulate across runs
+    for rid, ps in zip([first, *later], pairsets):
+        ref = crowdsourced_join(ps, PerfectCrowd(), order="expected",
+                                labeler="jax")
+        np.testing.assert_array_equal(res[rid].labels, ref.labels)
+
+
+def test_join_service_zero_pair_request():
+    """A request whose machine phase found no candidates completes with an
+    empty result instead of wedging the engine."""
+    from repro.serve.join_service import JoinService
+
+    svc = JoinService(lanes=2)
+    empty = PairSet(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                    np.zeros(0, np.float32), np.zeros(0, bool), n_objects=4)
+    r_empty = svc.submit(empty, PerfectCrowd())
+    r_real = svc.submit(_session_pairsets(17, 1)[0], PerfectCrowd())
+    res = svc.run()
+    assert len(res[r_empty].labels) == 0
+    assert res[r_empty].n_crowdsourced == 0 and res[r_empty].n_rounds == 0
+    assert len(res[r_real].labels) > 0  # the real session still completes
+
+
+def test_join_service_embeddings_end_to_end():
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.join_service import JoinService
+
+    rng = np.random.default_rng(3)
+    n_ent = 12
+    cents = rng.normal(size=(n_ent, 16))
+    ea_ids = rng.integers(0, n_ent, 40)
+    eb_ids = rng.integers(0, n_ent, 35)
+    ea = jnp.asarray(cents[ea_ids] + 0.15 * rng.normal(size=(40, 16)),
+                     jnp.float32)
+    eb = jnp.asarray(cents[eb_ids] + 0.15 * rng.normal(size=(35, 16)),
+                     jnp.float32)
+    svc = JoinService(lanes=2)
+    mesh = make_host_mesh(1, 1)
+    rid = svc.submit_embeddings(
+        ea, eb, 0.8, mesh, crowd=PerfectCrowd(),
+        truth_fn=lambda r, c: ea_ids[r] == eb_ids[c], impl="interpret")
+    res = svc.run()[rid]
+    assert res.quality is not None and res.quality.precision == 1.0
+    assert res.n_crowdsourced + res.n_deduced == len(res.labels)
+    assert res.n_deduced > 0  # transitivity actually saved questions

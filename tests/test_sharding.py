@@ -97,12 +97,14 @@ SUB_A2A = textwrap.dedent("""
          ).astype(jnp.bfloat16)
     y1, _ = moe_block(x, p, cfg)
     y2, _ = moe_block_a2a(x, p, cfg, mesh)
+    # both paths compute in bf16; GSPMD vs shard_map reduction orders differ
+    # by a rounding step, so the bound is bf16-eps-scale, not exact
     d = float(jnp.abs(y1.astype(jnp.float32) - y2.astype(jnp.float32)).max())
-    assert d < 1e-5, d
+    assert d < 8e-3, d
     g1 = jax.grad(lambda xx: jnp.sum(moe_block(xx, p, cfg)[0].astype(jnp.float32)))(x)
     g2 = jax.grad(lambda xx: jnp.sum(moe_block_a2a(xx, p, cfg, mesh)[0].astype(jnp.float32)))(x)
     dg = float(jnp.abs(g1.astype(jnp.float32) - g2.astype(jnp.float32)).max())
-    assert dg < 1e-5, dg
+    assert dg < 8e-3, dg
     print("A2A_OK")
 """)
 
