@@ -1,18 +1,23 @@
-"""Scale-out join pipeline throughput (DESIGN.md §7).
+"""Scale-out join pipeline throughput (DESIGN.md §7, §8).
 
-Two stages, benchmarked separately:
+Three stages, benchmarked separately:
 
 * machine phase — pairs-scored/s through the sharded candidate driver
   (dense grid scored + thresholded + compacted on device);
 * human phase — sessions/s through the lane-batched ``JoinService``
-  (frontier -> crowd -> deduce rounds over stacked sessions).
+  (frontier -> crowd -> deduce rounds over persistent session states);
+* engine rounds — the §8 comparison: per-round engine milliseconds and
+  host->device dispatch counts for the incremental ``SessionState`` path vs
+  an old-style from-scratch round loop, on a 16-lane workload.
 
 Besides the harness CSV rows, emits one ``# JSON`` line with the raw
-numbers for the perf trajectory.
+numbers for the perf trajectory.  Set ``BENCH_JOIN_TINY=1`` for a
+seconds-scale configuration (the CI smoke step).
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import numpy as np
@@ -22,6 +27,10 @@ from repro.core import PerfectCrowd
 from .common import dataset, row, timed
 
 
+def _tiny() -> bool:
+    return os.environ.get("BENCH_JOIN_TINY", "") not in ("", "0")
+
+
 def _bench_machine_phase(out: list, payload: dict) -> None:
     import jax.numpy as jnp
 
@@ -29,7 +38,7 @@ def _bench_machine_phase(out: list, payload: dict) -> None:
     from repro.launch.mesh import make_host_mesh
 
     rng = np.random.default_rng(0)
-    N, M, D = 2048, 2048, 64
+    N, M, D = (256, 256, 32) if _tiny() else (2048, 2048, 64)
     # entity-clustered embeddings so thresholding yields real candidates
     cents = rng.normal(size=(256, D))
     a = cents[rng.integers(0, 256, N)] + 0.3 * rng.normal(size=(N, D))
@@ -48,9 +57,9 @@ def _bench_machine_phase(out: list, payload: dict) -> None:
     payload["machine"] = {
         "n": N, "m": M, "d": D, "us_per_call": us,
         "pairs_scored_per_s": pairs_per_s, "candidates": len(cand),
-        "dropped": cand.n_dropped,
+        "dropped": cand.n_dropped, "capacity": cand.capacity,
     }
-    out.append(row("join_service/machine_2048x2048", us,
+    out.append(row(f"join_service/machine_{N}x{M}", us,
                    f"pairs_per_s={pairs_per_s:.3e} cands={len(cand)}"))
 
 
@@ -59,6 +68,8 @@ def _bench_human_phase(out: list, payload: dict) -> None:
 
     cases = [("paper", 0.3), ("paper", 0.4), ("product", 0.3),
              ("product", 0.45), ("paper", 0.5), ("product", 0.35)]
+    if _tiny():
+        cases = cases[:2]
     svc = JoinService(lanes=3)
     rids = []
     for name, tau in cases:
@@ -78,9 +89,164 @@ def _bench_human_phase(out: list, payload: dict) -> None:
         "saved_frac": 1.0 - n_crowd / max(n_pairs, 1),
     }
     out.append(row(
-        "join_service/sessions_6x3lanes", secs * 1e6 / len(cases),
+        f"join_service/sessions_{len(cases)}x3lanes", secs * 1e6 / len(cases),
         f"sessions_per_s={sessions_per_s:.2f} pairs={n_pairs} "
         f"crowdsourced={n_crowd} saved={1 - n_crowd / max(n_pairs, 1):.0%}"))
+
+
+def _engine_sessions(n_sessions: int, seed: int = 0):
+    """Uniform-bucket random sessions: each lane lands in the same
+    (p_cap, n_cap) jit bucket so the incremental service stacks one group."""
+    from repro.core import NEG, POS
+    from repro.data.entities import make_session_pairsets
+
+    n_rng, m_rng = (((10, 16), (20, 31)) if _tiny()
+                    else ((34, 64), (70, 128)))
+    pairsets = make_session_pairsets(n_sessions, seed=seed, n_objects=n_rng,
+                                     n_pairs=m_rng, n_entities=None)
+    sessions = [(np.asarray(ps.u), np.asarray(ps.v), ps.n_objects)
+                for ps in pairsets]
+    truths = [np.where(ps.truth, POS, NEG).astype(np.int32)
+              for ps in pairsets]
+    return sessions, truths
+
+
+def _run_incremental_rounds(sessions, truths):
+    """Persistent-state rounds (DESIGN.md §8): pack once, then per round one
+    frontier dispatch + one fused apply+deduce dispatch."""
+    import jax.numpy as jnp
+
+    from repro.core import (UNKNOWN, engine_dispatches,
+                            make_session_state_batch, pack_sessions,
+                            session_fold_answers_batch,
+                            session_frontier_batch)
+
+    U, V, labels0, valid, n_cap = pack_sessions(sessions)
+    state = make_session_state_batch(U, V, labels0, n_cap)
+    ms, dispatches = [], []
+    labels = labels0.copy()
+    while (labels[valid] == UNKNOWN).any():
+        engine_dispatches.reset()
+        t0 = time.perf_counter()
+        frontier = np.asarray(session_frontier_batch(state))
+        updates = np.full(labels.shape, UNKNOWN, np.int32)
+        for b in range(len(sessions)):
+            idx = np.nonzero(frontier[b])[0]
+            if len(idx):
+                updates[b, idx] = truths[b][idx]
+        engine_dispatches.add()  # updates upload
+        state = session_fold_answers_batch(state, jnp.asarray(updates))
+        labels = np.asarray(state.labels)
+        ms.append((time.perf_counter() - t0) * 1e3)
+        dispatches.append(engine_dispatches.count)
+        if not frontier.any():
+            break
+    engine_dispatches.reset()
+    return labels, ms, dispatches
+
+
+def _run_from_scratch_rounds(sessions, truths):
+    """Old-style rounds: re-pack + re-upload + rebuild components and
+    neg-keys from the label arrays every round (the pre-§8 design)."""
+    import jax.numpy as jnp
+
+    from repro.core import (UNKNOWN, boruvka_frontier_batch, deduce_sessions,
+                            engine_dispatches, pack_sessions)
+
+    state_labels = [np.full(len(u), UNKNOWN, np.int32)
+                    for u, _, _ in sessions]
+    ms, dispatches = [], []
+    labels = None
+    while True:
+        engine_dispatches.reset()
+        t0 = time.perf_counter()
+        U, V, L, valid, n_cap = pack_sessions(sessions)
+        for b, sl in enumerate(state_labels):
+            L[b, :len(sl)] = sl
+        engine_dispatches.add(4)  # U, V, L, published uploads
+        uj, vj, lj = jnp.asarray(U), jnp.asarray(V), jnp.asarray(L)
+        published = jnp.zeros(L.shape, bool)
+        frontier = np.asarray(
+            boruvka_frontier_batch(uj, vj, lj, published, n_cap))
+        updates = np.full(L.shape, UNKNOWN, np.int32)
+        for b in range(len(sessions)):
+            idx = np.nonzero(frontier[b])[0]
+            if len(idx):
+                updates[b, idx] = truths[b][idx]
+        engine_dispatches.add(1)  # updates upload
+        upd = jnp.asarray(updates)
+        lj = jnp.where(upd != UNKNOWN, upd, lj)
+        labels = np.asarray(deduce_sessions(uj, vj, lj, n_cap))
+        for b, sl in enumerate(state_labels):
+            state_labels[b] = labels[b, :len(sl)]
+        ms.append((time.perf_counter() - t0) * 1e3)
+        dispatches.append(engine_dispatches.count)
+        if not (labels[valid] == UNKNOWN).any() or not frontier.any():
+            break
+    engine_dispatches.reset()
+    return labels, ms, dispatches
+
+
+def _bench_engine_rounds(out: list, payload: dict) -> None:
+    lanes = 16
+    sessions, truths = _engine_sessions(lanes)
+    # warm both paths' jit caches on the same sessions (packed shapes are
+    # data-dependent) so per-round ms is execution, not tracing
+    _run_incremental_rounds(sessions, truths)
+    _run_from_scratch_rounds(sessions, truths)
+
+    lab_inc, ms_inc, d_inc = _run_incremental_rounds(sessions, truths)
+    lab_fs, ms_fs, d_fs = _run_from_scratch_rounds(sessions, truths)
+    for b, (u, _, _) in enumerate(sessions):  # same math, same labels
+        np.testing.assert_array_equal(lab_inc[b, :len(u)], lab_fs[b, :len(u)])
+    inc_ms = float(np.mean(ms_inc))
+    fs_ms = float(np.mean(ms_fs))
+    inc_d = float(np.mean(d_inc))
+    fs_d = float(np.mean(d_fs))
+    payload["engine_rounds"] = {
+        "lanes": lanes,
+        "rounds": {"incremental": len(ms_inc), "from_scratch": len(ms_fs)},
+        "ms_per_round": {"incremental": ms_inc, "from_scratch": ms_fs},
+        "dispatches_per_round": {"incremental": d_inc, "from_scratch": d_fs},
+        "mean_ms_per_round": {"incremental": inc_ms, "from_scratch": fs_ms},
+        "mean_dispatches_per_round": {"incremental": inc_d,
+                                      "from_scratch": fs_d},
+        "fewer_dispatches": inc_d < fs_d,
+    }
+    out.append(row(
+        f"join_service/engine_rounds_{lanes}lanes", inc_ms * 1e3,
+        f"inc_ms={inc_ms:.1f} fs_ms={fs_ms:.1f} "
+        f"inc_dispatch={inc_d:.1f} fs_dispatch={fs_d:.1f} "
+        f"fewer_dispatches={inc_d < fs_d}"))
+
+
+def _bench_async_gateway(out: list, payload: dict) -> None:
+    """Simulated platform minutes: round barrier vs async ID/NF serving."""
+    from repro.core import LatencyModel
+    from repro.data.entities import make_session_pairsets
+    from repro.serve.join_service import JoinService
+
+    pairsets = make_session_pairsets(2 if _tiny() else 6, seed=2,
+                                     n_objects=(14, 24), n_pairs=(30, 60))
+    mins = {}
+    for mode, async_mode, nf in (("barrier", False, False),
+                                 ("async_id_nf", True, True)):
+        svc = JoinService(lanes=2,
+                          latency=LatencyModel(n_workers=6, seed=7),
+                          async_mode=async_mode, nf=nf)
+        rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
+        res = svc.run()
+        mins[mode] = max(res[r].sim_minutes for r in rids)
+    payload["async_gateway"] = {
+        "sessions": len(pairsets), "lanes": 2,
+        "sim_minutes": mins,
+        "speedup": mins["barrier"] / max(mins["async_id_nf"], 1e-9),
+    }
+    out.append(row(
+        "join_service/async_vs_barrier", mins["async_id_nf"] * 60e6,
+        f"barrier_min={mins['barrier']:.0f} "
+        f"async_min={mins['async_id_nf']:.0f} "
+        f"speedup={mins['barrier'] / max(mins['async_id_nf'], 1e-9):.2f}x"))
 
 
 def run() -> list:
@@ -88,5 +254,7 @@ def run() -> list:
     payload: dict = {}
     _bench_machine_phase(out, payload)
     _bench_human_phase(out, payload)
+    _bench_engine_rounds(out, payload)
+    _bench_async_gateway(out, payload)
     out.append("# JSON " + json.dumps({"bench_join_service": payload}))
     return out

@@ -3,13 +3,22 @@ crowdsourcing labeling framework (ClusterGraph deduction, labeling orders,
 parallel labeling) — exact sequential oracle plus the TPU-native JAX engine.
 """
 from .cluster_graph import ClusterGraph, MATCH, NON_MATCH
-from .crowd import CostModel, Crowd, LatencyModel, NoisyCrowd, PerfectCrowd
+from .crowd import (CostModel, Crowd, CrowdAnswer, CrowdGateway, CrowdTicket,
+                    LatencyModel, NoisyCrowd, PerfectCrowd)
 from .deduce import deduce_bruteforce
-from .jax_graph import (NEG, POS, UNKNOWN, boruvka_frontier,
+from .jax_graph import (NEG, POS, UNKNOWN, SessionState, boruvka_frontier,
                         boruvka_frontier_batch, connected_components,
                         connected_components_batch, deduce_batch,
-                        deduce_sessions, label_parallel_jax,
-                        label_parallel_jax_batch, neg_keys, pack_sessions)
+                        deduce_sessions, engine_dispatches,
+                        label_parallel_jax, label_parallel_jax_batch,
+                        make_session_state, make_session_state_batch,
+                        neg_keys, pack_sessions, pair_key_bits, pair_keys_fit,
+                        session_apply_answers, session_apply_answers_batch,
+                        session_deduce, session_deduce_batch,
+                        session_fold_answers, session_fold_answers_batch,
+                        session_from_labels, session_frontier,
+                        session_frontier_batch, session_mark_published,
+                        session_mark_published_batch)
 from .join import JoinResult, crowdsourced_join
 from .labeling import (LabelingResult, label_all_crowdsourced,
                        label_sequential)
@@ -37,5 +46,13 @@ __all__ = [
     "label_parallel_jax", "UNKNOWN", "NEG", "POS",
     "connected_components_batch", "boruvka_frontier_batch", "deduce_sessions",
     "pack_sessions", "label_parallel_jax_batch",
+    "SessionState", "make_session_state", "make_session_state_batch",
+    "session_from_labels", "session_frontier", "session_frontier_batch",
+    "session_apply_answers", "session_apply_answers_batch",
+    "session_deduce", "session_deduce_batch",
+    "session_fold_answers", "session_fold_answers_batch",
+    "session_mark_published", "session_mark_published_batch",
+    "pair_key_bits", "pair_keys_fit", "engine_dispatches",
+    "CrowdGateway", "CrowdTicket", "CrowdAnswer",
     "crowdsourced_join", "JoinResult", "quality", "Quality",
 ]

@@ -17,6 +17,13 @@ from typing import Dict, Iterable, Optional, Set, Tuple
 MATCH = "M"
 NON_MATCH = "N"
 
+# integer label codes shared with the array engine (repro.core.jax_graph
+# re-exports these); defined here so host-only modules like crowd.py can use
+# them without importing jax
+UNKNOWN = -1
+NEG = 0
+POS = 1
+
 
 class ClusterGraph:
     """Union-find with path compression + union by size, and cluster-level

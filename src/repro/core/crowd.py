@@ -12,16 +12,25 @@ qualification tests for §6.4.  We implement both regimes:
 * :class:`LatencyModel` — lognormal per-assignment completion times over a
   finite worker pool, used by the event-driven simulator for Table 1/2 wall
   clock and Figure 16.
+* :class:`CrowdGateway` — the batched, optionally-asynchronous transport the
+  serving layer talks to (DESIGN.md §8): ``post(pairs) -> ticket``,
+  ``poll() -> answers``, with in-flight tracking.  With a
+  :class:`LatencyModel` attached it simulates an asynchronous platform
+  (finite worker pool, lognormal per-assignment minutes, optional
+  non-matching-first steering), which is what lets the §5.2 instant-decision
+  / non-matching-first optimizations run in the serving path instead of only
+  in ``core/parallel.py``'s host simulator.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .cluster_graph import MATCH, NON_MATCH
+from .cluster_graph import MATCH, NEG, NON_MATCH, POS
 from .pairs import PairSet
 
 
@@ -104,3 +113,144 @@ class LatencyModel:
     def draw_minutes(self, rng: np.random.Generator, n: int) -> np.ndarray:
         mu = math.log(self.mean_minutes) - self.sigma**2 / 2
         return rng.lognormal(mu, self.sigma, size=n)
+
+
+# ---------------------------------------------------------------------------
+# CrowdGateway: batched, optionally-asynchronous crowd transport
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CrowdTicket:
+    """Receipt for one posted batch of pairs."""
+
+    tid: int
+    rid: int
+    indices: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class CrowdAnswer:
+    """One completed pair label, in engine encoding (POS / NEG)."""
+
+    rid: int
+    index: int
+    label: int
+    minutes: float      # simulated completion time (0.0 in immediate mode)
+
+
+class CrowdGateway:
+    """Batched crowd transport with in-flight tracking (DESIGN.md §8).
+
+    ``post(rid, pairs, indices, crowd) -> CrowdTicket`` hands a batch of
+    candidate pairs to the platform; ``poll() -> [CrowdAnswer, ...]`` returns
+    whatever has completed, and ``drain()`` blocks (advancing the simulated
+    clock) until nothing is in flight.  Answers come back in engine encoding
+    so the serving layer can fold them straight into a ``SessionState``.
+
+    Two regimes:
+
+    * ``latency=None`` — immediate mode: every posted pair's answer is
+      available on the next ``poll`` at simulated time 0.  This is the
+      transport for the round-barrier serving path; the per-pair
+      ``crowd.ask`` loop lives here, batched per post, instead of in the
+      service.
+    * ``latency=LatencyModel`` — simulated asynchronous platform: a finite
+      pool of ``latency.n_workers`` workers picks waiting pairs (uniformly at
+      random, as AMT assigns — or lowest-likelihood-first when ``nf=True``,
+      the §5.2 non-matching-first steering), each assignment completes after
+      a lognormal number of minutes, and ``poll`` advances the clock to the
+      next completion event.  ``now_minutes`` is the simulated wall clock.
+    """
+
+    def __init__(self, latency: Optional[LatencyModel] = None,
+                 nf: bool = False):
+        if latency is not None and latency.n_workers <= 0:
+            raise ValueError(
+                f"CrowdGateway needs a positive worker pool, got "
+                f"n_workers={latency.n_workers} — in-flight pairs could "
+                "never complete")
+        self.latency = latency
+        self.nf = nf
+        # randomness (worker pick + assignment latency) exists only in
+        # latency mode and is seeded by the LatencyModel
+        self._rng = latency.sampler() if latency is not None else None
+        # waiting: posted, not yet picked up by a worker (immediate mode:
+        # not yet polled).  Entries: (rid, index, label, likelihood).
+        self._waiting: List[Tuple[int, int, int, float]] = []
+        # running: (t_done, seq, rid, index, label) min-heap on t_done
+        self._running: List[Tuple[float, int, int, int, int]] = []
+        self._free_workers = latency.n_workers if latency is not None else 0
+        self._now = 0.0
+        self._seq = 0
+        self._next_tid = 0
+        self.n_posted = 0
+        self.n_answered = 0
+
+    @property
+    def now_minutes(self) -> float:
+        return self._now
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._waiting) + len(self._running)
+
+    def post(self, rid: int, pairs: PairSet, indices,
+             crowd: Crowd) -> CrowdTicket:
+        """Post a batch of pair indices; the crowd is asked per pair here
+        (batched transport), answers surface later via ``poll``."""
+        indices = [int(i) for i in indices]
+        for i in indices:
+            label = POS if crowd.ask(pairs, i) == MATCH else NEG
+            self._waiting.append((rid, i, label, float(pairs.likelihood[i])))
+        self.n_posted += len(indices)
+        if self.latency is not None:
+            self._assign()
+        tid = self._next_tid
+        self._next_tid += 1
+        return CrowdTicket(tid=tid, rid=rid, indices=tuple(indices))
+
+    def _assign(self) -> None:
+        """Free workers pick up waiting pairs (NF: lowest likelihood first)."""
+        while self._free_workers > 0 and self._waiting:
+            if self.nf:
+                k = min(range(len(self._waiting)),
+                        key=lambda j: (self._waiting[j][3],
+                                       self._waiting[j][0],
+                                       self._waiting[j][1]))
+            else:
+                k = int(self._rng.integers(len(self._waiting)))
+            rid, idx, label, _ = self._waiting.pop(k)
+            dt = float(self.latency.draw_minutes(self._rng, 1)[0])
+            heapq.heappush(self._running,
+                           (self._now + dt, self._seq, rid, idx, label))
+            self._seq += 1
+            self._free_workers -= 1
+
+    def poll(self) -> List[CrowdAnswer]:
+        """Immediate mode: everything posted.  Latency mode: advance the
+        clock to the next completion event and return the answers landing
+        there (freed workers immediately pick up waiting pairs)."""
+        if self.latency is None:
+            out = [CrowdAnswer(rid, i, lab, self._now)
+                   for rid, i, lab, _ in self._waiting]
+            self._waiting.clear()
+            self.n_answered += len(out)
+            return out
+        if not self._running:
+            return []
+        t0 = self._running[0][0]
+        out: List[CrowdAnswer] = []
+        while self._running and self._running[0][0] <= t0 + 1e-12:
+            t, _, rid, idx, label = heapq.heappop(self._running)
+            out.append(CrowdAnswer(rid, idx, label, t))
+            self._free_workers += 1
+        self._now = max(self._now, t0)
+        self._assign()
+        self.n_answered += len(out)
+        return out
+
+    def drain(self) -> List[CrowdAnswer]:
+        """Poll until nothing is in flight (the round-barrier transport)."""
+        out = list(self.poll())
+        while self.in_flight:
+            out.extend(self.poll())
+        return out

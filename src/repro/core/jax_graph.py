@@ -1,57 +1,143 @@
-"""TPU-native transitive-relations engine (DESIGN.md §4).
+"""TPU-native transitive-relations engine (DESIGN.md §4, §7, §8).
 
 Vectorized, ``jit``-able re-formulation of the paper's ClusterGraph machinery
 so the deduction/selection inner loops run as dense array programs on an
-accelerator mesh instead of pointer-chasing union-find on a host:
+accelerator mesh instead of pointer-chasing union-find on a host.
 
-* ``connected_components`` — hook-and-compress (pointer jumping) over the
-  matching-edge list; O(log n) ``while_loop`` rounds of O(E) scatter/gather.
-* ``neg_keys`` + ``deduce_batch`` — cluster-level negative edges become a
-  sorted array of canonical ``lo * n + hi`` root-pair keys; "is there an edge
-  between cluster(o) and cluster(o')?" is a vectorized ``searchsorted``.
-* ``*_batch`` variants (``connected_components_batch``,
-  ``boruvka_frontier_batch``, ``deduce_sessions``) — ``vmap``-stacked forms
-  that advance B independent join sessions per device dispatch, with padding
-  masks for ragged session sizes (DESIGN.md §7).  ``label_parallel_jax_batch``
-  is the multi-session driver; it matches ``label_parallel_jax`` pair-for-pair
-  on every session.
-* ``boruvka_frontier`` — the parallel re-formulation of Algorithm 3.  With
-  every unlabeled pair optimistically assumed matching, the sequential scan
-  selects exactly the **priority-Kruskal forest** of the candidate graph
-  (an edge is selected iff earlier-priority edges do not already connect its
-  endpoints, with negative-deduced pairs excluded).  By the MSF cut property
-  (priorities are distinct), every component's minimum-priority incident valid
-  edge belongs to that forest — so Borůvka rounds reproduce it in O(log n)
-  data-parallel steps.  Negative-edge exclusion is evaluated against *current*
-  components, which can only shrink the per-round frontier vs. the sequential
-  scan (never publishes a pair the oracle wouldn't); on neg-free instances the
-  selection is exactly equal (property-tested).
+The engine is organized around a persistent, device-resident
+:class:`SessionState` pytree (DESIGN.md §8): per-session
+``(u, v, labels, published, roots, neg_keys, rounds)``.  State is updated
+**incrementally** as crowd answers land:
+
+* new POS labels hook into the existing union-find forest via *bounded*
+  pointer jumping from the current ``roots`` (``_union_impl`` starting from
+  the live forest, not from ``arange(n)``);
+* new NEG labels are keyed under the current roots and merged into the
+  sorted ``neg_keys`` array with a ``searchsorted`` parallel merge instead
+  of a full rebuild + sort; existing keys are re-canonicalized (decompose →
+  remap through the new roots → re-sort) only when a union actually moved a
+  root.
+
+State transformations (all jitted, state-in/state-out):
+
+* ``session_frontier``  — priority-Borůvka selection (parallel Algorithm 3)
+  over the live forest; published (in-flight) pairs are assumed matching but
+  excluded from the output (the §5.2 instant-decision contract).
+* ``session_apply_answers`` — fold crowd answers into labels/roots/neg_keys.
+* ``session_deduce``    — one deduction sweep (Algorithm 1 batched) over the
+  maintained roots + neg-key index; published pairs are skipped (their
+  answers are in flight).
+* ``session_fold_answers`` — apply + deduce fused into one dispatch.
+
+``*_batch`` variants are ``vmap``s over stacked states that advance B
+independent join sessions per device dispatch (DESIGN.md §7).
+
+Thin **from-scratch wrappers** keep the historical signatures for oracle
+parity tests: ``boruvka_frontier{,_batch}`` and ``deduce_sessions`` rebuild a
+state from plain label arrays (connected components from ``arange(n)``, full
+neg-key sort) and then run the same state transformations — the incremental
+path is property-tested bit-identical against them.
+
+The priority-Borůvka selection itself is unchanged math (DESIGN.md §4): with
+every unlabeled pair optimistically assumed matching, the sequential scan
+selects exactly the priority-Kruskal forest of the candidate graph; by the
+MSF cut property each component's minimum-priority incident valid edge
+belongs to that forest, so Borůvka rounds reproduce it in O(log n)
+data-parallel steps.  Negative-edge exclusion is evaluated against *current*
+components, which can only shrink a round's frontier relative to the
+sequential scan — it never publishes a pair the oracle wouldn't.
 
 All functions take fixed-shape arrays + validity masks so they stay jittable.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-# label encoding for the array engine
-UNKNOWN = -1
-NEG = 0
-POS = 1
+# label encoding for the array engine (canonical home: cluster_graph.py,
+# which stays importable without jax)
+from .cluster_graph import NEG, POS, UNKNOWN
 
 
 # ---------------------------------------------------------------------------
-# Connected components over matching edges: pointer jumping
+# Dispatch accounting (DESIGN.md §8)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_objects",))
-def connected_components(u: jax.Array, v: jax.Array, mask: jax.Array,
-                         n_objects: int) -> jax.Array:
-    """Roots (min vertex id per component) over edges where ``mask`` is True."""
-    parent0 = jnp.arange(n_objects, dtype=jnp.int32)
+class DispatchCounter:
+    """Tally of host->device dispatches (compiled-function launches plus
+    host-array uploads) issued by the engine drivers, so benchmarks can show
+    the incremental session-state path doing less per round than the
+    from-scratch path (``benchmarks/bench_join_service.py``)."""
+
+    __slots__ = ("count",)
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def add(self, n: int = 1) -> None:
+        self.count += n
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+engine_dispatches = DispatchCounter()
+
+
+# ---------------------------------------------------------------------------
+# Canonical pair keys + representable-range guard (shared helper)
+# ---------------------------------------------------------------------------
+def pair_key_bits() -> int:
+    """Usable bits for canonical ``lo * n + hi`` pair keys.
+
+    Under the default jax config int64 silently narrows to int32, so only 31
+    bits are available; with ``jax_enable_x64`` (production) the full 63-bit
+    positive range is usable."""
+    return 63 if jax.config.jax_enable_x64 else 31
+
+
+def pair_keys_fit(n_objects: int) -> bool:
+    """True iff an ``n_objects`` universe's pair keys are representable in
+    the current key dtype.  The single guard shared by ``canonical_keys``
+    and the serving layer's capacity bucketing (DESIGN.md §8)."""
+    return n_objects * n_objects < 2 ** pair_key_bits()
+
+
+def _key_dtype():
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def _key_sentinel() -> int:
+    """Max value of the key dtype — the padding sentinel for neg-key arrays
+    (strictly above any real key thanks to the ``pair_keys_fit`` guard)."""
+    return int(np.iinfo(np.dtype(_key_dtype().dtype)).max)
+
+
+def canonical_keys(roots_u: jax.Array, roots_v: jax.Array, n_objects: int) -> jax.Array:
+    """Canonical ``lo * n + hi`` cluster-pair keys, range-guarded."""
+    if not pair_keys_fit(n_objects):
+        raise ValueError(
+            f"n_objects={n_objects} overflows {pair_key_bits() + 1}-bit pair "
+            "keys; enable jax_enable_x64 for large object universes"
+        )
+    kdt = _key_dtype()
+    lo = jnp.minimum(roots_u, roots_v).astype(kdt)
+    hi = jnp.maximum(roots_u, roots_v).astype(kdt)
+    return lo * jnp.asarray(n_objects, kdt) + hi
+
+
+# ---------------------------------------------------------------------------
+# Union-find over matching edges: hook-and-compress pointer jumping.
+# ``_union_impl`` starts from an arbitrary existing forest, which is what
+# makes the incremental path bounded: merging k new edges into a compressed
+# forest takes O(log k) rounds instead of O(log n) from scratch.
+# ---------------------------------------------------------------------------
+def _union_impl(parent0: jax.Array, u: jax.Array, v: jax.Array,
+                mask: jax.Array, n_objects: int) -> jax.Array:
     big = jnp.int32(n_objects)  # sentinel larger than any id
     uu = jnp.where(mask, u, 0).astype(jnp.int32)
     vv = jnp.where(mask, v, 0).astype(jnp.int32)
@@ -87,31 +173,57 @@ def connected_components(u: jax.Array, v: jax.Array, mask: jax.Array,
     return parent
 
 
-def canonical_keys(roots_u: jax.Array, roots_v: jax.Array, n_objects: int) -> jax.Array:
-    # Keys are lo * n + hi.  Under the default jax config int64 silently
-    # narrows to int32, so guard the representable range; with
-    # ``jax_enable_x64`` (production) the full int64 range is available.
-    key_bits = 63 if jax.config.jax_enable_x64 else 31
-    if n_objects * n_objects >= 2**key_bits:
-        raise ValueError(
-            f"n_objects={n_objects} overflows {key_bits + 1}-bit pair keys; "
-            "enable jax_enable_x64 for large object universes"
-        )
-    kdt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
-    lo = jnp.minimum(roots_u, roots_v).astype(kdt)
-    hi = jnp.maximum(roots_u, roots_v).astype(kdt)
-    return lo * jnp.asarray(n_objects, kdt) + hi
+def _cc_impl(u, v, mask, n_objects: int) -> jax.Array:
+    return _union_impl(jnp.arange(n_objects, dtype=jnp.int32), u, v, mask,
+                       n_objects)
 
 
 @functools.partial(jax.jit, static_argnames=("n_objects",))
-def neg_keys(roots: jax.Array, u: jax.Array, v: jax.Array, neg_mask: jax.Array,
-             n_objects: int) -> jax.Array:
-    """Sorted canonical keys of cluster pairs joined by a labeled neg edge.
-    Invalid slots are pushed to the end as int64 max-sentinels."""
+def _connected_components_jit(u, v, mask, n_objects):
+    return _cc_impl(u, v, mask, n_objects)
+
+
+def connected_components(u: jax.Array, v: jax.Array, mask: jax.Array,
+                         n_objects: int) -> jax.Array:
+    """Roots (min vertex id per component) over edges where ``mask`` is True."""
+    engine_dispatches.add()
+    return _connected_components_jit(u, v, mask, n_objects)
+
+
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def _connected_components_batch_jit(u, v, mask, n_objects):
+    return jax.vmap(lambda uu, vv, mm: _cc_impl(uu, vv, mm, n_objects))(
+        u, v, mask)
+
+
+def connected_components_batch(u: jax.Array, v: jax.Array, mask: jax.Array,
+                               n_objects: int) -> jax.Array:
+    """(B, P) edge lists -> (B, n_objects) roots, one dispatch for B sessions."""
+    engine_dispatches.add()
+    return _connected_components_batch_jit(u, v, mask, n_objects)
+
+
+# ---------------------------------------------------------------------------
+# Sorted negative-key index: build, query, incremental maintenance
+# ---------------------------------------------------------------------------
+def _neg_keys_impl(roots, u, v, neg_mask, n_objects: int) -> jax.Array:
     keys = canonical_keys(roots[u], roots[v], n_objects)
     sentinel = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
     keys = jnp.where(neg_mask, keys, sentinel)
     return jnp.sort(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def _neg_keys_jit(roots, u, v, neg_mask, n_objects):
+    return _neg_keys_impl(roots, u, v, neg_mask, n_objects)
+
+
+def neg_keys(roots: jax.Array, u: jax.Array, v: jax.Array, neg_mask: jax.Array,
+             n_objects: int) -> jax.Array:
+    """Sorted canonical keys of cluster pairs joined by a labeled neg edge.
+    Invalid slots are pushed to the end as max-sentinels."""
+    engine_dispatches.add()
+    return _neg_keys_jit(roots, u, v, neg_mask, n_objects)
 
 
 def _in_sorted(sorted_keys: jax.Array, queries: jax.Array) -> jax.Array:
@@ -120,15 +232,46 @@ def _in_sorted(sorted_keys: jax.Array, queries: jax.Array) -> jax.Array:
     return sorted_keys[idx] == queries
 
 
-@functools.partial(jax.jit, static_argnames=("n_objects",))
-def deduce_batch(
-    roots: jax.Array,
-    sorted_neg: jax.Array,
-    qu: jax.Array,
-    qv: jax.Array,
-    n_objects: int,
-) -> jax.Array:
-    """Algorithm 1 vectorized: per query pair returns POS / NEG / UNKNOWN."""
+def _rekey_impl(sorted_keys: jax.Array, roots: jax.Array,
+                n_objects: int) -> jax.Array:
+    """Re-canonicalize a sorted neg-key array after unions moved roots:
+    decompose each key, remap both endpoints through the new forest, re-sort.
+    A key whose endpoints were untouched maps to itself; sentinels stay
+    sentinels.  The resulting multiset equals a from-scratch rebuild under the
+    new roots (DESIGN.md §8 invariant)."""
+    kdt = sorted_keys.dtype
+    sentinel = jnp.asarray(jnp.iinfo(kdt).max, kdt)
+    is_pad = sorted_keys == sentinel
+    n = jnp.asarray(n_objects, kdt)
+    lo = jnp.where(is_pad, 0, sorted_keys // n).astype(jnp.int32)
+    hi = jnp.where(is_pad, 0, sorted_keys % n).astype(jnp.int32)
+    lo = lo.clip(0, n_objects - 1)
+    hi = hi.clip(0, n_objects - 1)
+    new = canonical_keys(roots[lo], roots[hi], n_objects)
+    new = jnp.where(is_pad, sentinel, new)
+    return jnp.sort(new)
+
+
+def _merge_sorted_impl(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Parallel merge of two sentinel-padded sorted (P,) key arrays via
+    ``searchsorted`` rank computation — the incremental alternative to a full
+    rebuild + sort when new NEG keys arrive.  Returns the first P slots of
+    the merged order, which hold every real key (each pair contributes at
+    most one key, so real keys across both inputs never exceed P)."""
+    P = a.shape[0]
+    sentinel = jnp.asarray(jnp.iinfo(a.dtype).max, a.dtype)
+    ia = jnp.arange(P, dtype=jnp.int32) + jnp.searchsorted(b, a, side="left")
+    ib = jnp.arange(P, dtype=jnp.int32) + jnp.searchsorted(a, b, side="right")
+    out = jnp.full((2 * P,), sentinel, a.dtype)
+    out = out.at[ia].set(a)
+    out = out.at[ib].set(b)
+    return out[:P]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1, batched: POS / NEG / UNKNOWN lookup against roots + neg index
+# ---------------------------------------------------------------------------
+def _deduce_lookup_impl(roots, sorted_neg, qu, qv, n_objects: int) -> jax.Array:
     ru, rv = roots[qu], roots[qv]
     same = ru == rv
     keys = canonical_keys(ru, rv, n_objects)
@@ -136,112 +279,399 @@ def deduce_batch(
     return jnp.where(same, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
 
 
-# ---------------------------------------------------------------------------
-# Priority-Borůvka frontier (parallel Algorithm 3)
-# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("n_objects",))
-def boruvka_frontier(
-    u: jax.Array,          # (P,) int32
-    v: jax.Array,          # (P,) int32
-    labels: jax.Array,     # (P,) int32 in {UNKNOWN, NEG, POS}
-    published: jax.Array,  # (P,) bool — in-flight pairs (instant decision)
-    n_objects: int,
-) -> jax.Array:
-    """Returns a bool mask of pairs to crowdsource now.
+def _deduce_batch_jit(roots, sorted_neg, qu, qv, n_objects):
+    return _deduce_lookup_impl(roots, sorted_neg, qu, qv, n_objects)
 
-    Priorities are the array positions (the caller passes pairs already in
-    labeling order), so `i < j` means pair i precedes pair j in ω.
+
+def deduce_batch(roots: jax.Array, sorted_neg: jax.Array, qu: jax.Array,
+                 qv: jax.Array, n_objects: int) -> jax.Array:
+    """Algorithm 1 vectorized: per query pair returns POS / NEG / UNKNOWN."""
+    engine_dispatches.add()
+    return _deduce_batch_jit(roots, sorted_neg, qu, qv, n_objects)
+
+
+# ---------------------------------------------------------------------------
+# SessionState: persistent on-device join-session state (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("u", "v", "labels", "published", "roots", "neg_keys",
+                 "rounds"),
+    meta_fields=("n_objects",),
+)
+@dataclasses.dataclass
+class SessionState:
+    """One join session's engine state, resident on device across rounds.
+
+    Invariants (DESIGN.md §8): ``roots`` are the canonical (min-vertex-id)
+    connected components of the POS-labeled edges, and ``neg_keys`` is the
+    sorted multiset of canonical root-pair keys of the NEG-labeled edges
+    under those roots (sentinel-padded to shape (P,)).  Both are therefore
+    bit-identical to a from-scratch rebuild from ``labels`` at any point.
+    ``published`` marks in-flight pairs (posted to the crowd, no answer yet);
+    ``rounds`` counts answer folds.  ``n_objects`` is static metadata so the
+    state jits with stable cache keys.
     """
+
+    u: jax.Array          # (P,) int32 pair endpoints, labeling order
+    v: jax.Array          # (P,) int32
+    labels: jax.Array     # (P,) int32 {UNKNOWN, NEG, POS}
+    published: jax.Array  # (P,) bool — in-flight pairs
+    roots: jax.Array      # (n_objects,) int32 union-find forest over POS edges
+    neg_keys: jax.Array   # (P,) sorted canonical keys of NEG edges
+    rounds: jax.Array     # () int32 answer-fold counter
+    n_objects: int        # static
+
+
+def make_session_state(u, v, n_objects: int, pair_capacity: int = 0,
+                       object_capacity: int = 0) -> SessionState:
+    """Fresh (all-UNKNOWN) session state, padded to the given capacities.
+
+    Padded pair slots hold the inert pre-labeled POS self-loop (0, 0)
+    (DESIGN.md §7); padded object ids are isolated singletons.  This is the
+    once-per-lane pack the serving layer runs at lane open."""
+    u = np.asarray(u, np.int32)
+    v = np.asarray(v, np.int32)
+    P = len(u)
+    p_cap = max(pair_capacity, P)
+    n_cap = max(object_capacity, int(n_objects))
+    U = np.zeros(p_cap, np.int32)
+    V = np.zeros(p_cap, np.int32)
+    U[:P] = u
+    V[:P] = v
+    labels = np.full(p_cap, POS, np.int32)
+    labels[:P] = UNKNOWN
+    engine_dispatches.add()
+    return SessionState(
+        u=jnp.asarray(U),
+        v=jnp.asarray(V),
+        labels=jnp.asarray(labels),
+        published=jnp.zeros(p_cap, bool),
+        roots=jnp.arange(n_cap, dtype=jnp.int32),
+        neg_keys=jnp.full((p_cap,), _key_sentinel(), _key_dtype()),
+        rounds=jnp.int32(0),
+        n_objects=n_cap,
+    )
+
+
+def make_session_state_batch(U, V, labels0, n_objects: int) -> SessionState:
+    """Stacked fresh state over (B, P) packed sessions (``pack_sessions``)."""
+    B, P = np.asarray(U).shape
+    engine_dispatches.add()
+    return SessionState(
+        u=jnp.asarray(U, jnp.int32),
+        v=jnp.asarray(V, jnp.int32),
+        labels=jnp.asarray(labels0, jnp.int32),
+        published=jnp.zeros((B, P), bool),
+        roots=jnp.broadcast_to(jnp.arange(n_objects, dtype=jnp.int32),
+                               (B, n_objects)),
+        neg_keys=jnp.full((B, P), _key_sentinel(), _key_dtype()),
+        rounds=jnp.zeros((B,), jnp.int32),
+        n_objects=int(n_objects),
+    )
+
+
+def _state_from_labels_impl(u, v, labels, published, n_objects: int
+                            ) -> SessionState:
+    """From-scratch state build: CC from ``arange(n)`` + full neg-key sort.
+    The reference the incremental path is tested bit-identical against."""
+    u = u.astype(jnp.int32)
+    v = v.astype(jnp.int32)
+    labels = labels.astype(jnp.int32)
+    roots = _cc_impl(u, v, labels == POS, n_objects)
+    negk = _neg_keys_impl(roots, u, v, labels == NEG, n_objects)
+    return SessionState(u=u, v=v, labels=labels, published=published,
+                        roots=roots, neg_keys=negk, rounds=jnp.int32(0),
+                        n_objects=n_objects)
+
+
+@functools.partial(jax.jit, static_argnames=("n_objects",))
+def _session_from_labels_jit(u, v, labels, published, n_objects):
+    return _state_from_labels_impl(u, v, labels, published, n_objects)
+
+
+def session_from_labels(u, v, labels, published, n_objects: int) -> SessionState:
+    """Rebuild a :class:`SessionState` from plain label arrays (one dispatch).
+    Used by the thin oracle-parity wrappers and for state audits."""
+    engine_dispatches.add()
+    return _session_from_labels_jit(jnp.asarray(u), jnp.asarray(v),
+                                    jnp.asarray(labels), jnp.asarray(published),
+                                    n_objects)
+
+
+# ---------------------------------------------------------------------------
+# State transformations (DESIGN.md §8): apply / deduce / fold / frontier
+# ---------------------------------------------------------------------------
+def _apply_impl(state: SessionState, updates: jax.Array,
+                count_round: bool) -> SessionState:
+    """Fold new labels into the state incrementally.
+
+    ``updates`` is (P,) int32, UNKNOWN where nothing landed.  POS labels hook
+    into the live forest via bounded pointer jumping; NEG labels are keyed
+    under the post-union roots and merged into the sorted neg-key array; the
+    existing keys are re-canonicalized only when a union actually moved a
+    root (``lax.cond``-gated, so the common no-union fold skips the sort)."""
+    n = state.n_objects
+    new = (updates != UNKNOWN) & (state.labels == UNKNOWN)
+    labels = jnp.where(new, updates, state.labels)
+    pos_new = new & (updates == POS)
+    roots = _union_impl(state.roots, state.u, state.v, pos_new, n)
+    sentinel = jnp.asarray(jnp.iinfo(state.neg_keys.dtype).max,
+                           state.neg_keys.dtype)
+    # re-key only when a union moved a root AND there are real keys to move
+    # (an all-sentinel index — the common early-session case — needs no sort)
+    moved = jnp.any(roots != state.roots) & (state.neg_keys[0] != sentinel)
+    negk = jax.lax.cond(
+        moved, lambda nk: _rekey_impl(nk, roots, n), lambda nk: nk,
+        state.neg_keys)
+    neg_new = new & (updates == NEG)
+    fresh = jnp.where(neg_new,
+                      canonical_keys(roots[state.u], roots[state.v], n),
+                      sentinel)
+    negk = jax.lax.cond(
+        jnp.any(neg_new),
+        lambda nk: _merge_sorted_impl(nk, jnp.sort(fresh)),
+        lambda nk: nk, negk)
+    published = state.published & ~new
+    rounds = state.rounds
+    if count_round:
+        rounds = rounds + jnp.any(new).astype(jnp.int32)
+    return dataclasses.replace(state, labels=labels, published=published,
+                               roots=roots, neg_keys=negk, rounds=rounds)
+
+
+def _deduce_impl(state: SessionState) -> SessionState:
+    """One deduction sweep over the maintained roots + neg-key index.  Pairs
+    still in flight (``published``) are skipped — their crowd answers are the
+    ones that will label them (§5.2 stream semantics).
+
+    Deduction needs no structural maintenance beyond duplicate neg keys: a
+    deduced-POS pair has equal roots by construction (no union can occur, so
+    no re-key either), and a deduced-NEG pair joins already-negatively-
+    adjacent clusters — its key is merged in as a duplicate, which is what a
+    from-scratch rebuild would also contain, keeping the state bit-identical."""
+    n = state.n_objects
+    ded = _deduce_lookup_impl(state.roots, state.neg_keys, state.u, state.v, n)
+    new = (ded != UNKNOWN) & (state.labels == UNKNOWN) & ~state.published
+    labels = jnp.where(new, ded, state.labels)
+    neg_new = new & (ded == NEG)
+    sentinel = jnp.asarray(jnp.iinfo(state.neg_keys.dtype).max,
+                           state.neg_keys.dtype)
+    fresh = jnp.where(
+        neg_new,
+        canonical_keys(state.roots[state.u], state.roots[state.v], n),
+        sentinel)
+    negk = jax.lax.cond(
+        jnp.any(neg_new),
+        lambda nk: _merge_sorted_impl(nk, jnp.sort(fresh)),
+        lambda nk: nk, state.neg_keys)
+    return dataclasses.replace(state, labels=labels, neg_keys=negk)
+
+
+def _fold_impl(state: SessionState, updates: jax.Array) -> SessionState:
+    return _deduce_impl(_apply_impl(state, updates, count_round=True))
+
+
+def _frontier_impl(state: SessionState) -> jax.Array:
+    """Priority-Borůvka frontier over the live forest (parallel Algorithm 3).
+
+    Starts from the state's roots instead of re-deriving components from the
+    edge list: published pairs are hooked in as assumed-matching with one
+    bounded union, and each Borůvka round's winners are likewise merged
+    incrementally, with the neg-key index re-canonicalized per round."""
+    u, v, n = state.u, state.v, state.n_objects
     P = u.shape[0]
     prio = jnp.arange(P, dtype=jnp.int32)
     inf = jnp.int32(P)
-
-    # "selected" accumulates the optimistic matching forest:
-    # starts as the labeled-POS edges; published (in-flight) pairs are also
-    # assumed matching from the start (they are already guaranteed pairs).
-    selected0 = (labels == POS) | (published & (labels == UNKNOWN))
+    unknown = state.labels == UNKNOWN
+    pub = state.published & unknown
+    sentinel = jnp.asarray(jnp.iinfo(state.neg_keys.dtype).max,
+                           state.neg_keys.dtype)
+    # sorted index ⇒ a real key, if any, sits at slot 0; the count of real
+    # keys is invariant under re-keying, so one check covers every round
+    has_neg = state.neg_keys[0] != sentinel
+    roots0 = _union_impl(state.roots, u, v, pub, n)
+    negk0 = jax.lax.cond(
+        jnp.any(pub) & has_neg,
+        lambda nk: _rekey_impl(nk, roots0, n), lambda nk: nk,
+        state.neg_keys)
     frontier0 = jnp.zeros((P,), dtype=bool)
-    undecided0 = (labels == UNKNOWN) & ~published
+    undecided0 = unknown & ~state.published
 
-    def round_body(state):
-        selected, frontier, undecided, _ = state
-        roots = connected_components(u, v, selected, n_objects)
-        sorted_neg = neg_keys(roots, u, v, labels == NEG, n_objects)
+    def round_body(st):
+        roots, negk, frontier, undecided, _ = st
         ru, rv = roots[u], roots[v]
-        keys = canonical_keys(ru, rv, n_objects)
-        neg_hit = _in_sorted(sorted_neg, keys)
+        keys = canonical_keys(ru, rv, n)
+        neg_hit = _in_sorted(negk, keys)
         # a candidate: undecided, endpoints in different clusters, no neg edge
         cand = undecided & (ru != rv) & ~neg_hit
         # pairs that became deducible drop out of contention permanently
         undecided = undecided & cand
         # each cluster's min-priority incident candidate edge is in the forest
         p = jnp.where(cand, prio, inf)
-        best = jnp.full((n_objects,), inf, dtype=jnp.int32)
+        best = jnp.full((n,), inf, dtype=jnp.int32)
         best = best.at[ru].min(p)
         best = best.at[rv].min(p)
         win = cand & ((best[ru] == prio) | (best[rv] == prio))
-        selected = selected | win
         frontier = frontier | win
         undecided = undecided & ~win
         progress = jnp.any(win)
-        return selected, frontier, undecided, progress
+        roots = jax.lax.cond(
+            progress, lambda r: _union_impl(r, u, v, win, n), lambda r: r,
+            roots)
+        negk = jax.lax.cond(
+            progress & has_neg,
+            lambda nk: _rekey_impl(nk, roots, n), lambda nk: nk,
+            negk)
+        return roots, negk, frontier, undecided, progress
 
-    def cond(state):
-        return state[3]
+    def cond(st):
+        return st[4]
 
-    state = (selected0, frontier0, undecided0, jnp.bool_(True))
-    _, frontier, _, _ = jax.lax.while_loop(cond, round_body, state)
+    st = (roots0, negk0, frontier0, undecided0, jnp.bool_(True))
+    _, _, frontier, _, _ = jax.lax.while_loop(cond, round_body, st)
     return frontier
 
 
+def _mark_published_impl(state: SessionState, mask: jax.Array) -> SessionState:
+    return dataclasses.replace(state, published=state.published | mask)
+
+
+# jitted public entry points (counted host dispatches)
+_session_frontier_jit = jax.jit(_frontier_impl)
+_session_frontier_batch_jit = jax.jit(jax.vmap(_frontier_impl))
+_session_apply_jit = jax.jit(
+    functools.partial(_apply_impl, count_round=True))
+_session_apply_batch_jit = jax.jit(
+    jax.vmap(functools.partial(_apply_impl, count_round=True)))
+_session_deduce_jit = jax.jit(_deduce_impl)
+_session_deduce_batch_jit = jax.jit(jax.vmap(_deduce_impl))
+_session_fold_jit = jax.jit(_fold_impl)
+_session_fold_batch_jit = jax.jit(jax.vmap(_fold_impl))
+_session_mark_published_jit = jax.jit(_mark_published_impl)
+_session_mark_published_batch_jit = jax.jit(jax.vmap(_mark_published_impl))
+
+
+def session_frontier(state: SessionState) -> jax.Array:
+    """(P,) bool mask of pairs to crowdsource now, from the live state."""
+    engine_dispatches.add()
+    return _session_frontier_jit(state)
+
+
+def session_frontier_batch(state: SessionState) -> jax.Array:
+    """(B, P) stacked frontier masks, one dispatch for B sessions."""
+    engine_dispatches.add()
+    return _session_frontier_batch_jit(state)
+
+
+def session_apply_answers(state: SessionState, updates) -> SessionState:
+    """Fold crowd answers (UNKNOWN = nothing landed) into the state."""
+    engine_dispatches.add()
+    return _session_apply_jit(state, updates)
+
+
+def session_apply_answers_batch(state: SessionState, updates) -> SessionState:
+    engine_dispatches.add()
+    return _session_apply_batch_jit(state, updates)
+
+
+def session_deduce(state: SessionState) -> SessionState:
+    """One deduction sweep; skips in-flight (published) pairs."""
+    engine_dispatches.add()
+    return _session_deduce_jit(state)
+
+
+def session_deduce_batch(state: SessionState) -> SessionState:
+    engine_dispatches.add()
+    return _session_deduce_batch_jit(state)
+
+
+def session_fold_answers(state: SessionState, updates) -> SessionState:
+    """apply_answers + deduce fused into a single device dispatch."""
+    engine_dispatches.add()
+    return _session_fold_jit(state, updates)
+
+
+def session_fold_answers_batch(state: SessionState, updates) -> SessionState:
+    engine_dispatches.add()
+    return _session_fold_batch_jit(state, updates)
+
+
+def session_mark_published(state: SessionState, mask) -> SessionState:
+    """Record pairs as posted to the crowd (in-flight)."""
+    engine_dispatches.add()
+    return _session_mark_published_jit(state, mask)
+
+
+def session_mark_published_batch(state: SessionState, mask) -> SessionState:
+    engine_dispatches.add()
+    return _session_mark_published_batch_jit(state, mask)
+
+
 # ---------------------------------------------------------------------------
-# Multi-session batched engine (DESIGN.md §7)
-#
-# Stacked (B, P)/(B, n) forms of the primitives above.  Sessions are padded
-# to common capacities; padded pair slots carry the self-loop (0, 0) with a
-# pre-set POS label, which is inert in every primitive: the union hook
-# parent[0] <- parent[0] is a no-op, POS slots never enter a frontier, and a
-# same-root pair never produces a negative key.
+# Thin from-scratch wrappers (oracle parity tests; historical signatures)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("n_objects",))
-def connected_components_batch(u: jax.Array, v: jax.Array, mask: jax.Array,
-                               n_objects: int) -> jax.Array:
-    """(B, P) edge lists -> (B, n_objects) roots, one dispatch for B sessions."""
-    return jax.vmap(
-        lambda uu, vv, mm: connected_components(uu, vv, mm, n_objects)
-    )(u, v, mask)
+def _boruvka_frontier_jit(u, v, labels, published, n_objects):
+    return _frontier_impl(
+        _state_from_labels_impl(u, v, labels, published, n_objects))
+
+
+def boruvka_frontier(u: jax.Array, v: jax.Array, labels: jax.Array,
+                     published: jax.Array, n_objects: int) -> jax.Array:
+    """Returns a bool mask of pairs to crowdsource now.
+
+    Thin from-scratch wrapper: rebuilds a :class:`SessionState` from the
+    label arrays, then runs the state frontier.  Priorities are the array
+    positions (the caller passes pairs already in labeling order), so
+    ``i < j`` means pair i precedes pair j in ω.
+    """
+    engine_dispatches.add()
+    return _boruvka_frontier_jit(u, v, labels, published, n_objects)
 
 
 @functools.partial(jax.jit, static_argnames=("n_objects",))
+def _boruvka_frontier_batch_jit(u, v, labels, published, n_objects):
+    def one(uu, vv, ll, pp):
+        return _frontier_impl(
+            _state_from_labels_impl(uu, vv, ll, pp, n_objects))
+    return jax.vmap(one)(u, v, labels, published)
+
+
 def boruvka_frontier_batch(u: jax.Array, v: jax.Array, labels: jax.Array,
                            published: jax.Array, n_objects: int) -> jax.Array:
-    """(B, P) stacked sessions -> (B, P) bool frontier masks.
+    """(B, P) stacked sessions -> (B, P) bool frontier masks (from scratch).
 
     The vmapped ``while_loop`` iterates until every session's frontier
     converges; already-converged sessions are held fixed by the batching
     rule, so per-session results equal the unbatched ``boruvka_frontier``.
     """
-    return jax.vmap(
-        lambda uu, vv, ll, pp: boruvka_frontier(uu, vv, ll, pp, n_objects)
-    )(u, v, labels, published)
+    engine_dispatches.add()
+    return _boruvka_frontier_batch_jit(u, v, labels, published, n_objects)
 
 
 @functools.partial(jax.jit, static_argnames=("n_objects",))
-def deduce_sessions(u: jax.Array, v: jax.Array, labels: jax.Array,
-                    n_objects: int) -> jax.Array:
-    """One deduction sweep over B stacked sessions: every UNKNOWN pair whose
-    label follows from the POS/NEG evidence is filled in.  Returns the
-    updated (B, P) label array."""
-
+def _deduce_sessions_jit(u, v, labels, n_objects):
     def one(uu, vv, ll):
-        roots = connected_components(uu, vv, ll == POS, n_objects)
-        sneg = neg_keys(roots, uu, vv, ll == NEG, n_objects)
-        ded = deduce_batch(roots, sneg, uu, vv, n_objects)
-        return jnp.where(ll == UNKNOWN, ded, ll)
-
+        st = _state_from_labels_impl(uu, vv, ll,
+                                     jnp.zeros(ll.shape, bool), n_objects)
+        return _deduce_impl(st).labels
     return jax.vmap(one)(u, v, labels)
 
 
+def deduce_sessions(u: jax.Array, v: jax.Array, labels: jax.Array,
+                    n_objects: int) -> jax.Array:
+    """One deduction sweep over B stacked sessions, from scratch: every
+    UNKNOWN pair whose label follows from the POS/NEG evidence is filled in.
+    Returns the updated (B, P) label array."""
+    engine_dispatches.add()
+    return _deduce_sessions_jit(u, v, labels, n_objects)
+
+
+# ---------------------------------------------------------------------------
+# Multi-session packing (DESIGN.md §7)
+# ---------------------------------------------------------------------------
 def pack_sessions(sessions, pair_capacity: int = 0, object_capacity: int = 0):
     """Pack ragged sessions [(u, v, n_objects), ...] into stacked arrays.
 
@@ -277,25 +707,27 @@ def label_parallel_jax_batch(
     ``b``'s frontier.  Optional capacities let callers pad to stable shapes
     (one jit cache entry across waves).
 
+    The whole batch lives in one stacked :class:`SessionState`: sessions are
+    packed once up front, every round is one frontier dispatch + one fused
+    apply+deduce dispatch over the persistent state (DESIGN.md §8).
+
     Returns ``[(labels, crowdsourced_mask, round_sizes), ...]`` per session,
     identical to running ``label_parallel_jax`` on each session alone.
     """
     B = len(sessions)
     U, V, labels0, valid, n_cap = pack_sessions(
         sessions, pair_capacity, object_capacity)
-    uj = jnp.asarray(U)
-    vj = jnp.asarray(V)
-    labels = jnp.asarray(labels0)
-    published = jnp.zeros(labels0.shape, dtype=bool)
+    state = make_session_state_batch(U, V, labels0, n_cap)
     crowdsourced = np.zeros(labels0.shape, dtype=bool)
     rounds: list = [[] for _ in range(B)]
-    while bool(jnp.any(labels == UNKNOWN)):
-        frontier = np.asarray(
-            boruvka_frontier_batch(uj, vj, labels, published, n_cap))
+    labels_host = labels0.copy()
+    while (labels_host == UNKNOWN).any():
+        frontier = np.asarray(session_frontier_batch(state))
         if not frontier.any():
             # everything left (in every session) is deducible
-            labels = deduce_sessions(uj, vj, labels, n_cap)
-            assert not bool(jnp.any(labels == UNKNOWN)), "engine stuck"
+            state = session_deduce_batch(state)
+            labels_host = np.asarray(state.labels)
+            assert not (labels_host == UNKNOWN).any(), "engine stuck"
             break
         updates = np.full(labels0.shape, UNKNOWN, np.int32)
         for b in range(B):
@@ -305,18 +737,19 @@ def label_parallel_jax_batch(
             rounds[b].append(len(idx))
             crowdsourced[b, idx] = True
             updates[b, idx] = crowd_fn(b, idx)
-        upd = jnp.asarray(updates)
-        labels = jnp.where(upd != UNKNOWN, upd, labels)
-        labels = deduce_sessions(uj, vj, labels, n_cap)
-    labels_np = np.asarray(labels)
+        engine_dispatches.add()  # updates upload
+        state = session_fold_answers_batch(state, jnp.asarray(updates))
+        labels_host = np.asarray(state.labels)
     return [
-        (labels_np[b, valid[b]], crowdsourced[b, valid[b]], rounds[b])
+        (labels_host[b, valid[b]], crowdsourced[b, valid[b]], rounds[b])
         for b in range(B)
     ]
 
 
 # ---------------------------------------------------------------------------
-# Full batch-parallel labeling loop (host-driven, device inner loops)
+# Full batch-parallel labeling loop (host-driven, device inner loops).
+# Kept deliberately from-scratch per round: this is the reference the
+# incremental session-state path is property-tested bit-identical against.
 # ---------------------------------------------------------------------------
 def label_parallel_jax(
     u: np.ndarray,

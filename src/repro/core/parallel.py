@@ -12,7 +12,10 @@ deduction sweep, until every pair is labeled.
 
 ``simulate_stream``: event-driven simulator where pairs return one at a time —
 implements the **instant decision** (ID) and **non-matching first** (NF)
-optimizations of §5.2 and produces the Figure 16 availability curves.
+optimizations of §5.2 and produces the Figure 16 availability curves.  These
+same optimizations run in the serving path via ``CrowdGateway`` +
+``SessionState`` (``serve/join_service.py``, DESIGN.md §8); this module stays
+the exact host-side oracle for them.
 
 ``simulate_wallclock``: discrete-event AMT simulator (HIT batching, worker
 pool, lognormal assignment latencies) for Table 1 / Table 2 completion times.

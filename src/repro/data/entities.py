@@ -211,3 +211,43 @@ DATASETS = {"paper": make_paper_dataset, "product": make_product_dataset}
 
 def load_dataset(name: str, seed: int = 0) -> EntityDataset:
     return DATASETS[name](seed=seed)
+
+
+def make_session_pairsets(
+    n_sessions: int,
+    seed: int = 0,
+    n_objects: Tuple[int, int] = (12, 24),
+    n_pairs: Tuple[int, int] = (20, 60),
+    n_entities: Optional[int] = 5,
+    likelihood: Tuple[float, float, float] = (0.8, 0.3, 0.15),
+) -> List[PairSet]:
+    """Small entity-clustered join sessions for benchmarks and tests.
+
+    Each session draws ``n ~ U[n_objects)`` records over ground-truth entity
+    clusters (``n_entities``; None scales it as ``max(n // 6, 2)``), samples
+    ``m ~ U[n_pairs)`` distinct candidate pairs, and assigns likelihoods
+    correlated with truth — ``base_match`` / ``base_non`` + ``noise`` uniform
+    jitter — which is the machine-phase assumption non-matching-first
+    steering relies on."""
+    import itertools
+
+    rng = np.random.default_rng(seed)
+    base_match, base_non, noise = likelihood
+    out: List[PairSet] = []
+    for _ in range(n_sessions):
+        n = int(rng.integers(*n_objects))
+        k = n_entities if n_entities is not None else max(n // 6, 2)
+        ent = rng.integers(0, k, n)
+        all_e = list(itertools.combinations(range(n), 2))
+        # clamp both ends: a small n may not have n_pairs[0] distinct pairs
+        m_hi = min(n_pairs[1], len(all_e))
+        m_lo = min(n_pairs[0], m_hi)
+        m = int(rng.integers(m_lo, m_hi + 1))
+        sel = rng.permutation(len(all_e))[:m]
+        u = np.array([all_e[i][0] for i in sel], np.int32)
+        v = np.array([all_e[i][1] for i in sel], np.int32)
+        truth = ent[u] == ent[v]
+        lik = (np.where(truth, base_match, base_non)
+               + noise * rng.random(m)).astype(np.float32)
+        out.append(PairSet(u, v, lik, truth, n_objects=n))
+    return out

@@ -51,6 +51,7 @@ class ShardedCandidates:
     cols: np.ndarray     # (C,) int32 global col (index into b)
     scores: np.ndarray   # (C,) float32 similarity
     n_dropped: int       # candidates lost to per-device capacity overflow
+    capacity: int = 0    # per-device capacity actually used
 
     def __len__(self) -> int:
         return len(self.rows)
@@ -165,6 +166,7 @@ def sharded_candidates(
         cols=cols[keep].astype(np.int32),
         scores=scores[keep].astype(np.float32),
         n_dropped=int(np.asarray(dropped).sum()),
+        capacity=cap,
     )
 
 

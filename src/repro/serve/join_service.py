@@ -1,17 +1,34 @@
-"""JoinService — streaming join requests over the batched session engine.
+"""JoinService — streaming join requests over the persistent session engine.
 
 The serving counterpart of ``ServeEngine`` for the paper's pipeline
-(DESIGN.md §7): join requests queue up, get packed into a fixed number of
-session *lanes*, and every engine round advances all occupied lanes with one
-batched frontier dispatch + one batched deduction dispatch
-(``boruvka_frontier_batch`` / ``deduce_sessions``).  A lane whose session
-fully labels is finalized and refilled from the queue mid-wave — the same
-continuous lane-refill design ``ServeEngine`` uses for decode lanes, applied
-to join sessions.
+(DESIGN.md §7, §8): join requests queue up, get packed into a fixed number of
+session *lanes*, and every lane carries a device-resident
+:class:`~repro.core.jax_graph.SessionState` that is packed **once** at lane
+open and updated incrementally — no per-round re-pack, no from-scratch
+component/neg-key rebuilds.  All crowd I/O goes through a
+:class:`~repro.core.crowd.CrowdGateway` (batched ``post`` / ``poll``), never
+a per-pair host loop.
 
-Shapes are bucketed to powers of two (pair and object capacities) so lane
-churn reuses a handful of jit cache entries instead of recompiling per
-request mix.
+Two serving disciplines over the same state machinery:
+
+* **Round barrier** (``async_mode=False``, the default): every engine round
+  is one batched frontier dispatch over bucket-grouped stacked lane states,
+  one gateway post per lane, a full gateway drain, and one fused
+  apply+deduce dispatch.  A lane whose session fully labels is finalized and
+  refilled from the queue mid-wave — the same continuous lane-refill design
+  ``ServeEngine`` uses for decode lanes.
+* **Asynchronous ID/NF** (``async_mode=True``): the event-driven regime of
+  §5.2, lifted from ``core/parallel.py``'s host simulator into serving.  A
+  lane folds answers the moment the gateway delivers them; a returned
+  non-matching answer (or a drained lane) triggers an immediate deduce +
+  re-frontier + post instead of waiting for the round barrier, and with
+  ``nf=True`` the gateway steers workers to probable-non-matching pairs
+  first.  With a ``LatencyModel`` attached, ``sim_minutes`` on the results
+  reports the simulated platform wall clock.
+
+Shapes are bucketed to powers of two (pair and object capacities) at lane
+open, so lane churn reuses a handful of jit cache entries instead of
+recompiling per request mix.
 
 The machine phase plugs in through :meth:`submit_embeddings`, which runs the
 mesh-sharded candidate generator (``sharded_candidates``) and feeds the
@@ -22,16 +39,19 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cluster_graph import MATCH
-from repro.core.crowd import CostModel, Crowd, PerfectCrowd
-from repro.core.jax_graph import (NEG, POS, UNKNOWN, boruvka_frontier_batch,
-                                  deduce_sessions, pack_sessions)
+from repro.core.crowd import CostModel, Crowd, CrowdGateway, LatencyModel, \
+    PerfectCrowd
+from repro.core.jax_graph import (
+    UNKNOWN, POS, SessionState, engine_dispatches, make_session_state,
+    pair_keys_fit, session_apply_answers, session_deduce,
+    session_fold_answers, session_fold_answers_batch, session_frontier,
+    session_frontier_batch, session_mark_published)
 from repro.core.metrics import Quality, quality
 from repro.core.pairs import PairSet
 from repro.core.sorting import get_order
@@ -57,6 +77,11 @@ class JoinSessionResult:
     cost_cents: float
     quality: Optional[Quality]
     wall_seconds: float
+    sim_minutes: Optional[float] = None  # gateway clock at completion
+    # device-side answer-fold counter (SessionState.rounds): equals n_rounds
+    # under the round barrier; under async ID/NF it counts poll events that
+    # landed answers, i.e. how often the lane re-engaged the engine
+    fold_rounds: int = 0
 
     @property
     def n_crowdsourced(self) -> int:
@@ -72,17 +97,22 @@ class _Lane:
     req: JoinRequest
     perm: np.ndarray               # labeling order over the request's pairs
     ordered: PairSet               # req.pairs.take(perm)
-    u: np.ndarray                  # (P,) int32, ordered
-    v: np.ndarray
-    n_objects: int
-    labels: np.ndarray             # (P,) int32 {UNKNOWN, NEG, POS}, ordered
-    crowdsourced: np.ndarray       # (P,) bool, ordered
+    p: int                         # true pair count (before capacity padding)
+    state: SessionState            # device-resident, packed once at open
+    labels_host: np.ndarray        # (p,) int32 mirror for done/progress checks
+    crowdsourced: np.ndarray       # (p,) bool, ordered
     round_sizes: List[int]
     t0: float
+    in_flight: int = 0             # pairs posted to the gateway, unanswered
 
     @property
     def done(self) -> bool:
-        return not (self.labels == UNKNOWN).any()
+        return not (self.labels_host == UNKNOWN).any()
+
+    @property
+    def bucket(self) -> Tuple[int, int]:
+        """jit-cache key: (pair capacity, object capacity)."""
+        return (int(self.state.u.shape[0]), self.state.n_objects)
 
 
 def _bucket(n: int, floor: int = 8) -> int:
@@ -93,16 +123,43 @@ def _bucket(n: int, floor: int = 8) -> int:
     return b
 
 
+def _stack_states(states: List[SessionState]) -> SessionState:
+    engine_dispatches.add()  # device-side restack of the lane group
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _index_state(stacked: SessionState, b: int) -> SessionState:
+    return jax.tree_util.tree_map(lambda x: x[b], stacked)
+
+
 class JoinService:
     """Accepts streaming join requests; drives frontier -> crowd -> deduce
-    rounds over up to ``lanes`` sessions per device dispatch."""
+    over up to ``lanes`` persistent device-resident session states.
 
-    def __init__(self, lanes: int = 4, cost: Optional[CostModel] = None):
+    ``latency`` attaches a simulated asynchronous crowd platform (see
+    :class:`CrowdGateway`); ``async_mode=True`` switches from round-barrier
+    rounds to the event-driven ID/NF discipline; ``nf`` steers the simulated
+    workers to probable-non-matching pairs first (only meaningful with a
+    latency model).
+    """
+
+    def __init__(self, lanes: int = 4, cost: Optional[CostModel] = None,
+                 latency: Optional[LatencyModel] = None,
+                 async_mode: bool = False, nf: bool = False):
         self.lanes = lanes
         self.cost = cost or CostModel()
+        self.latency = latency
+        self.async_mode = async_mode
+        self.nf = nf
         self.queue: Deque[JoinRequest] = collections.deque()
         self.results: Dict[int, JoinSessionResult] = {}
         self._next_rid = 0
+        # round-barrier group cache: bucket -> (lanes, stacked state).  While
+        # a group's membership is unchanged the stacked state IS the lanes'
+        # state (no per-round restack/unstack); it is written back to the
+        # lanes only when membership changes or a lane finishes.
+        self._stacks: Dict[Tuple[int, int],
+                           Tuple[Tuple[_Lane, ...], SessionState]] = {}
 
     # -- request ingestion ---------------------------------------------------
     def submit(self, pairs: PairSet, crowd: Optional[Crowd] = None,
@@ -120,22 +177,27 @@ class JoinService:
                           threshold: float, mesh,
                           crowd: Optional[Crowd] = None,
                           truth_fn=None, order: str = "expected",
+                          capacity: Optional[int] = None,
                           impl: str = "auto") -> int:
         """Machine phase + enqueue: score (emb_a x emb_b) on the mesh with
         the sharded kernel driver, keep pairs above ``threshold`` (cosine,
         mapped to [0, 1] likelihood), and queue the session.
 
         ``truth_fn(rows, cols) -> bool array`` attaches ground truth (for
-        simulated crowds / quality accounting).  Join keys are offset so the
-        two sides share one object universe: a-row i -> i, b-row j -> N + j.
+        simulated crowds / quality accounting).  ``capacity`` bounds the
+        per-device candidate buffers (default: lossless).  Join keys are
+        offset so the two sides share one object universe: a-row i -> i,
+        b-row j -> N + j.
         """
         from repro.kernels.pair_scores.sharded import sharded_candidates
 
-        cand = sharded_candidates(emb_a, emb_b, threshold, mesh, impl=impl)
+        cand = sharded_candidates(emb_a, emb_b, threshold, mesh,
+                                  capacity=capacity, impl=impl)
         if cand.n_dropped:
             raise RuntimeError(
-                f"candidate buffers overflowed ({cand.n_dropped} dropped) — "
-                "raise capacity or threshold")
+                f"candidate buffers overflowed: {cand.n_dropped} candidates "
+                f"dropped at per-device capacity {cand.capacity} — raise "
+                "capacity or threshold")
         n_a = int(emb_a.shape[0])
         truth = None
         if truth_fn is not None:
@@ -149,30 +211,37 @@ class JoinService:
         )
         return self.submit(pairs, crowd, order)
 
-    # -- engine --------------------------------------------------------------
+    # -- lane lifecycle ------------------------------------------------------
     def _open_lane(self, req: JoinRequest) -> _Lane:
         perm = get_order(req.pairs, req.order)
         ordered = req.pairs.take(perm)
         P = len(ordered)
+        p_cap = _bucket(P)
+        n_cap = _bucket(ordered.n_objects)
+        # canonical pair keys are lo * n + hi; don't let bucketing push n_cap
+        # past the representable range when the raw size is still fine
+        if not pair_keys_fit(n_cap):
+            n_cap = ordered.n_objects
+        state = make_session_state(ordered.u, ordered.v, ordered.n_objects,
+                                  pair_capacity=p_cap, object_capacity=n_cap)
         return _Lane(
             req=req,
             perm=perm,
             ordered=ordered,
-            u=np.asarray(ordered.u, np.int32),
-            v=np.asarray(ordered.v, np.int32),
-            n_objects=ordered.n_objects,
-            labels=np.full(P, UNKNOWN, np.int32),
+            p=P,
+            state=state,
+            labels_host=np.full(P, UNKNOWN, np.int32),
             crowdsourced=np.zeros(P, bool),
             round_sizes=[],
             t0=time.perf_counter(),
         )
 
-    def _finalize(self, lane: _Lane) -> None:
+    def _finalize(self, lane: _Lane, sim_minutes: Optional[float]) -> None:
         req = lane.req
         P = len(req.pairs)
         labels = np.zeros(P, bool)
         crowdsourced = np.zeros(P, bool)
-        labels[lane.perm] = lane.labels == POS
+        labels[lane.perm] = lane.labels_host == POS
         crowdsourced[lane.perm] = lane.crowdsourced
         q = None
         if req.pairs.truth is not None:
@@ -191,75 +260,198 @@ class JoinService:
             cost_cents=self.cost.cost_cents(n_crowd),
             quality=q,
             wall_seconds=time.perf_counter() - lane.t0,
+            sim_minutes=sim_minutes,
+            fold_rounds=int(np.asarray(lane.state.rounds)),
         )
 
-    def _step(self, active: List[_Lane]) -> bool:
-        """One engine round over the occupied lanes: batched frontier, crowd
-        calls per lane, batched deduction sweep.  Returns True iff any lane
-        made progress (crowdsourced or deduced at least one pair)."""
-        B = len(active)
-        p_cap = _bucket(max(len(l.u) for l in active))
-        n_max = max(l.n_objects for l in active)
-        n_cap = _bucket(n_max)
-        # canonical pair keys are lo * n + hi; don't let bucketing push n_cap
-        # past the representable range when the raw size is still fine
-        key_bits = 63 if jax.config.jax_enable_x64 else 31
-        if n_cap * n_cap >= 2**key_bits:
-            n_cap = n_max
-        U, V, L, _, _ = pack_sessions(
-            [(l.u, l.v, l.n_objects) for l in active], pair_capacity=p_cap)
-        for b, lane in enumerate(active):
-            L[b, :len(lane.u)] = lane.labels
-        uj, vj = jnp.asarray(U), jnp.asarray(V)
-        lj = jnp.asarray(L)
-        published = jnp.zeros((B, p_cap), bool)
-        frontier = np.asarray(
-            boruvka_frontier_batch(uj, vj, lj, published, n_cap))
-        updates = np.full((B, p_cap), UNKNOWN, np.int32)
-        for b, lane in enumerate(active):
-            idx = np.nonzero(frontier[b])[0]
-            if len(idx) == 0:
-                continue
-            lane.round_sizes.append(len(idx))
-            lane.crowdsourced[idx] = True
-            got = np.array(
-                [POS if lane.req.crowd.ask(lane.ordered, int(i)) == MATCH
-                 else NEG for i in idx], np.int32)
-            updates[b, idx] = got
-        upd = jnp.asarray(updates)
-        lj = jnp.where(upd != UNKNOWN, upd, lj)
-        lj = deduce_sessions(uj, vj, lj, n_cap)
-        L = np.asarray(lj)
-        progress = False
-        for b, lane in enumerate(active):
-            new = L[b, :len(lane.u)]
-            progress |= (new != lane.labels).any()
-            lane.labels = new
-        return bool(progress)
+    def _retire_done(self, active: List[_Lane],
+                     gateway: Optional[CrowdGateway]) -> List[_Lane]:
+        still: List[_Lane] = []
+        sim = gateway.now_minutes if self.latency is not None else None
+        for lane in active:
+            if lane.done:
+                self._finalize(lane, sim)
+            else:
+                still.append(lane)
+        return still
 
+    # -- round-barrier engine ------------------------------------------------
+    def _writeback(self, entry: Tuple[Tuple[_Lane, ...], SessionState]) -> None:
+        """Materialize a cached group's stacked state back into its lanes."""
+        lanes, stacked = entry
+        engine_dispatches.add()  # per-lane gathers out of the stack
+        for b, lane in enumerate(lanes):
+            lane.state = _index_state(stacked, b)
+
+    def _group_stack(self, key: Tuple[int, int],
+                     lanes: List[_Lane]) -> SessionState:
+        """The group's stacked state: reused as long as membership holds."""
+        entry = self._stacks.get(key)
+        if entry is not None:
+            # identity comparison: _Lane holds arrays, dataclass __eq__ would
+            # compare them elementwise
+            if len(entry[0]) == len(lanes) and \
+                    all(a is b for a, b in zip(entry[0], lanes)):
+                return entry[1]
+            self._writeback(entry)  # membership changed: sync old members
+            del self._stacks[key]
+        return _stack_states([l.state for l in lanes])
+
+    def _step(self, active: List[_Lane], gateway: CrowdGateway) -> bool:
+        """One engine round over the occupied lanes: batched frontier over
+        bucket-grouped stacked states, one gateway post per lane, a full
+        gateway drain (the round barrier), one fused apply+deduce dispatch.
+        Returns True iff any lane made progress (crowdsourced or deduced at
+        least one pair)."""
+        groups: Dict[Tuple[int, int], List[_Lane]] = {}
+        for lane in active:
+            groups.setdefault(lane.bucket, []).append(lane)
+        staged = []
+        for key, lanes in groups.items():
+            stacked = self._group_stack(key, lanes)
+            frontier = np.asarray(session_frontier_batch(stacked))
+            staged.append((key, lanes, stacked, frontier))
+        # post every lane's frontier, then drain: the barrier spans all lanes
+        for _, lanes, _, frontier in staged:
+            for b, lane in enumerate(lanes):
+                idx = np.nonzero(frontier[b])[0]
+                if len(idx) == 0:
+                    continue
+                lane.round_sizes.append(len(idx))
+                lane.crowdsourced[idx] = True
+                gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd)
+        answers: Dict[int, List] = {}
+        for ans in gateway.drain():
+            answers.setdefault(ans.rid, []).append(ans)
+        progress = False
+        for key, lanes, stacked, frontier in staged:
+            B, p_cap = frontier.shape
+            updates = np.full((B, p_cap), UNKNOWN, np.int32)
+            for b, lane in enumerate(lanes):
+                for ans in answers.get(lane.req.rid, ()):
+                    updates[b, ans.index] = ans.label
+            engine_dispatches.add()  # updates upload
+            stacked = session_fold_answers_batch(stacked, jnp.asarray(updates))
+            self._stacks[key] = (tuple(lanes), stacked)
+            labels = np.asarray(stacked.labels)
+            for b, lane in enumerate(lanes):
+                new = labels[b, :lane.p]
+                progress |= bool((new != lane.labels_host).any())
+                lane.labels_host = new
+                if lane.done:  # leaving the group: materialize its state
+                    lane.state = _index_state(stacked, b)
+        return progress
+
+    # -- asynchronous ID/NF engine -------------------------------------------
+    def _publish(self, lane: _Lane, gateway: CrowdGateway) -> int:
+        """Select the lane's current frontier and post it (instant decision:
+        in-flight pairs are assumed matching but never re-posted)."""
+        frontier = np.asarray(session_frontier(lane.state))
+        idx = np.nonzero(frontier)[0]
+        if len(idx) == 0:
+            return 0
+        lane.round_sizes.append(len(idx))
+        lane.crowdsourced[idx] = True
+        engine_dispatches.add()  # frontier-mask upload
+        lane.state = session_mark_published(lane.state, jnp.asarray(frontier))
+        gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd)
+        lane.in_flight += len(idx)
+        return len(idx)
+
+    def _sweep_lane(self, lane: _Lane) -> None:
+        """Deduce everything the lane's evidence pins down (skipping pairs
+        whose answers are still in flight) and refresh the host mirror."""
+        lane.state = session_deduce(lane.state)
+        lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
+
+    def _run_async(self) -> Dict[int, JoinSessionResult]:
+        """Event-driven serving (§5.2 lifted into the service): lanes fold
+        answers as the gateway delivers them; a non-matching answer or a
+        drained lane triggers deduce + re-frontier + post immediately."""
+        gateway = CrowdGateway(latency=self.latency, nf=self.nf)
+        active: List[_Lane] = []
+        while self.queue or active or gateway.in_flight:
+            refilled = False
+            while self.queue and len(active) < self.lanes:
+                lane = self._open_lane(self.queue.popleft())
+                active.append(lane)
+                refilled = True
+            if refilled:
+                # zero-pair sessions are born done — finalize without posting
+                active = self._retire_done(active, gateway)
+                for lane in active:
+                    if lane.in_flight == 0 and not lane.round_sizes:
+                        self._publish(lane, gateway)
+            answers = gateway.poll()
+            if not answers:
+                if not active and not gateway.in_flight:
+                    continue  # queue may still refill
+                # platform drained: sweep + republish every stuck lane
+                posted = 0
+                for lane in list(active):
+                    if lane.in_flight:
+                        continue
+                    self._sweep_lane(lane)
+                    if not lane.done:
+                        posted += self._publish(lane, gateway)
+                active = self._retire_done(active, gateway)
+                if not answers and not posted and not gateway.in_flight \
+                        and active:
+                    raise RuntimeError(
+                        "join engine stuck: no frontier and nothing "
+                        f"deducible for rids {[l.req.rid for l in active]}")
+                continue
+            by_rid: Dict[int, List] = {}
+            for ans in answers:
+                by_rid.setdefault(ans.rid, []).append(ans)
+            lanes_by_rid = {l.req.rid: l for l in active}
+            for rid, got in by_rid.items():
+                lane = lanes_by_rid.get(rid)
+                if lane is None:
+                    continue  # lane already finalized (answer raced retire)
+                p_cap = lane.state.u.shape[0]
+                updates = np.full(p_cap, UNKNOWN, np.int32)
+                for ans in got:
+                    updates[ans.index] = ans.label
+                lane.in_flight -= len(got)
+                engine_dispatches.add()  # updates upload
+                any_neg = any(ans.label != POS for ans in got)
+                if any_neg or lane.in_flight == 0:
+                    # §5.2: a returned MATCH agrees with the optimistic
+                    # assumption — selection can only change on NEG (or when
+                    # the lane drains); fold + deduce + re-select at once.
+                    lane.state = session_fold_answers(
+                        lane.state, jnp.asarray(updates))
+                    lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
+                    if not lane.done:
+                        self._publish(lane, gateway)
+                else:
+                    lane.state = session_apply_answers(
+                        lane.state, jnp.asarray(updates))
+                    lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
+            active = self._retire_done(active, gateway)
+        return dict(self.results)
+
+    # -- entry point ---------------------------------------------------------
     def run(self) -> Dict[int, JoinSessionResult]:
         """Drain the queue: lanes are refilled the moment a session finishes
         (continuous batching).  Returns {rid: result} for everything served."""
+        if self.async_mode:
+            return self._run_async()
+        gateway = CrowdGateway(latency=self.latency, nf=self.nf)
         active: List[_Lane] = []
+        self._stacks.clear()  # drop any cache left by an aborted run
         while self.queue or active:
             while self.queue and len(active) < self.lanes:
                 active.append(self._open_lane(self.queue.popleft()))
             # zero-pair sessions are born done — finalize without a step
-            active = self._retire_done(active)
+            active = self._retire_done(active, gateway)
             if not active:
                 continue
-            if not self._step(active):
+            if not self._step(active, gateway):
                 raise RuntimeError(
                     "join engine stuck: no frontier and nothing deducible "
                     f"for rids {[l.req.rid for l in active]}")
-            active = self._retire_done(active)
+            active = self._retire_done(active, gateway)
+        self._stacks.clear()
         return dict(self.results)
-
-    def _retire_done(self, active: List[_Lane]) -> List[_Lane]:
-        still: List[_Lane] = []
-        for lane in active:
-            if lane.done:
-                self._finalize(lane)
-            else:
-                still.append(lane)
-        return still

@@ -7,6 +7,9 @@ import types
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too, so tests can import the `benchmarks` package (shared
+# from-scratch baseline) under bare `pytest` invocations
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 import pytest

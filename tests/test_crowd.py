@@ -1,0 +1,122 @@
+"""Crowd simulators and the CrowdGateway transport (DESIGN.md §8).
+
+NoisyCrowd's empirical majority-vote error must match its analytic
+``pair_error_rate``; the gateway must deliver every posted answer with a
+monotonic simulated clock, respect the worker pool, and steer
+non-matching-first when asked; and a NoisyCrowd end-to-end JoinService run
+must degrade quality in a bounded way, not collapse."""
+import numpy as np
+import pytest
+
+from repro.core import (MATCH, NEG, POS, CrowdGateway, LatencyModel,
+                        NoisyCrowd, PerfectCrowd)
+from repro.core.pairs import PairSet
+
+
+def _truth_pairs(n_pairs: int, all_match: bool = True) -> PairSet:
+    u = np.arange(n_pairs, dtype=np.int32)
+    v = u + n_pairs
+    truth = np.full(n_pairs, all_match, bool)
+    lik = np.linspace(0.9, 0.1, n_pairs).astype(np.float32)
+    return PairSet(u, v, lik, truth, n_objects=2 * n_pairs)
+
+
+# ---------------------------------------------------------------------------
+# NoisyCrowd: empirical vs analytic majority-vote error
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("error_rate,n_assignments", [(0.2, 3), (0.1, 5)])
+def test_noisy_crowd_empirical_matches_analytic(error_rate, n_assignments):
+    crowd = NoisyCrowd(error_rate=error_rate, n_assignments=n_assignments,
+                       qualification=False, seed=3)
+    pairs = _truth_pairs(1)
+    n_asks = 20_000
+    wrong = sum(crowd.ask(pairs, 0) != MATCH for _ in range(n_asks))
+    empirical = wrong / n_asks
+    analytic = crowd.pair_error_rate()
+    # ~4.6 sigma of a binomial at p≈0.1 over 20k draws is under 0.01
+    assert abs(empirical - analytic) < 0.01, (empirical, analytic)
+    assert crowd.n_asked == n_asks
+
+
+def test_noisy_crowd_qualification_reduces_error():
+    base = NoisyCrowd(error_rate=0.1, qualification=False)
+    qual = NoisyCrowd(error_rate=0.1, qualification=True)
+    assert qual.pair_error_rate() < base.pair_error_rate()
+
+
+# ---------------------------------------------------------------------------
+# CrowdGateway transport
+# ---------------------------------------------------------------------------
+def test_gateway_immediate_mode_batches_and_returns_all():
+    gw = CrowdGateway()
+    pairs = _truth_pairs(6)
+    crowd = PerfectCrowd()
+    ticket = gw.post(rid=7, pairs=pairs, indices=[0, 2, 5], crowd=crowd)
+    assert ticket.rid == 7 and ticket.indices == (0, 2, 5)
+    assert gw.in_flight == 3
+    answers = gw.poll()
+    assert gw.in_flight == 0 and len(answers) == 3
+    assert {a.index for a in answers} == {0, 2, 5}
+    assert all(a.label == POS and a.rid == 7 and a.minutes == 0.0
+               for a in answers)
+    assert gw.poll() == []
+    assert crowd.n_asked == 3  # the per-pair loop lives in the gateway
+
+
+def test_gateway_latency_mode_worker_pool_and_clock():
+    lat = LatencyModel(n_workers=2, mean_minutes=10.0, sigma=0.5, seed=1)
+    gw = CrowdGateway(latency=lat)
+    pairs = _truth_pairs(5)
+    gw.post(rid=0, pairs=pairs, indices=list(range(5)), crowd=PerfectCrowd())
+    # only n_workers assignments can run at once; the rest wait
+    assert gw.in_flight == 5
+    got, last_t = [], 0.0
+    while gw.in_flight:
+        answers = gw.poll()
+        assert answers, "in-flight pairs must eventually complete"
+        for a in answers:
+            assert a.minutes >= last_t - 1e-9  # monotonic simulated clock
+            last_t = a.minutes
+            got.append(a.index)
+    assert sorted(got) == list(range(5))
+    assert gw.now_minutes > 0.0
+    assert gw.n_posted == gw.n_answered == 5
+
+
+def test_gateway_nf_steers_low_likelihood_first():
+    """With one worker, nf=True must process pairs in ascending likelihood
+    order regardless of posting order."""
+    lat = LatencyModel(n_workers=1, mean_minutes=5.0, sigma=0.1, seed=2)
+    gw = CrowdGateway(latency=lat, nf=True)
+    pairs = _truth_pairs(4)   # likelihood descending in index
+    gw.post(rid=0, pairs=pairs, indices=[0, 1, 2, 3], crowd=PerfectCrowd())
+    seen = []
+    while gw.in_flight:
+        seen.extend(a.index for a in gw.poll())
+    assert seen == [3, 2, 1, 0]  # lowest likelihood first
+
+
+# ---------------------------------------------------------------------------
+# NoisyCrowd end to end through the service: degraded but bounded
+# ---------------------------------------------------------------------------
+def test_join_service_noisy_quality_degraded_but_bounded():
+    from repro.data.entities import make_session_pairsets
+    from repro.serve.join_service import JoinService
+
+    ps = make_session_pairsets(1, seed=11, n_objects=(40, 41),
+                               n_pairs=(160, 161), n_entities=8,
+                               likelihood=(0.75, 0.35, 0.2))[0]
+
+    svc = JoinService(lanes=2)
+    rid_perfect = svc.submit(ps, PerfectCrowd())
+    rid_noisy = svc.submit(ps, NoisyCrowd(error_rate=0.05, seed=4))
+    res = svc.run()
+    q_perfect = res[rid_perfect].quality
+    q_noisy = res[rid_noisy].quality
+    assert q_perfect.f_measure == 1.0
+    # noise degrades quality, but a 5% per-assignment error under 3-way
+    # majority vote must stay usable, not collapse
+    assert q_noisy.f_measure <= 1.0
+    assert q_noisy.f_measure >= 0.6, q_noisy
+    assert res[rid_noisy].n_crowdsourced + res[rid_noisy].n_deduced \
+        == len(ps)

@@ -1,4 +1,4 @@
-"""TPU-native engine vs the Python oracle (DESIGN.md §4 adaptation)."""
+"""TPU-native engine vs the Python oracle (DESIGN.md §4, §8 adaptation)."""
 import itertools
 
 import jax.numpy as jnp
@@ -9,7 +9,11 @@ from hypothesis import given, strategies as st
 from repro.core import (ClusterGraph, MATCH, NEG, NON_MATCH, POS, PairSet,
                         UNKNOWN, boruvka_frontier, connected_components,
                         deduce_batch, get_order, label_parallel_jax, neg_keys,
-                        parallel_crowdsourced_pairs)
+                        make_session_state, pair_key_bits, pair_keys_fit,
+                        parallel_crowdsourced_pairs, session_apply_answers,
+                        session_deduce, session_from_labels, session_frontier,
+                        session_mark_published)
+from repro.core.jax_graph import canonical_keys
 
 
 @st.composite
@@ -94,3 +98,110 @@ def test_jax_engine_full_run_correct_and_no_worse(world):
         u, v, n, lambda idx: truth_arr[idx])
     assert (out == truth_arr).all()
     assert crowdsourced.sum() <= P
+
+
+# ---------------------------------------------------------------------------
+# Persistent SessionState: incremental path bit-identical to from-scratch
+# (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def _random_world(rng):
+    n = int(rng.integers(4, 16))
+    ent = rng.integers(0, 4, n)
+    all_e = list(itertools.combinations(range(n), 2))
+    m = int(rng.integers(3, min(24, len(all_e)) + 1))
+    sel = rng.permutation(len(all_e))[:m]
+    u = np.array([all_e[i][0] for i in sel], np.int32)
+    v = np.array([all_e[i][1] for i in sel], np.int32)
+    truth = np.where(ent[u] == ent[v], POS, NEG).astype(np.int32)
+    return n, u, v, truth
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_session_state_incremental_bit_identical(seed):
+    """Fold answers into a persistent SessionState in random chunks; after
+    every fold the incrementally-maintained roots and sorted neg-key index
+    must equal a from-scratch rebuild bit-for-bit, and the state frontier
+    must equal the from-scratch wrapper's."""
+    rng = np.random.default_rng(seed)
+    n, u, v, truth = _random_world(rng)
+    m = len(u)
+    state = make_session_state(u, v, n)
+    labels = np.full(m, UNKNOWN, np.int32)
+    order = rng.permutation(m)
+    k = 0
+    while k < m:
+        step = int(rng.integers(1, 4))
+        idx = order[k:k + step]
+        k += step
+        upd = np.full(m, UNKNOWN, np.int32)
+        upd[idx] = truth[idx]
+        labels[idx] = truth[idx]
+        state = session_apply_answers(state, jnp.asarray(upd))
+        ref = session_from_labels(u, v, labels, np.zeros(m, bool), n)
+        np.testing.assert_array_equal(np.asarray(state.labels), labels)
+        np.testing.assert_array_equal(np.asarray(state.roots),
+                                      np.asarray(ref.roots))
+        np.testing.assert_array_equal(np.asarray(state.neg_keys),
+                                      np.asarray(ref.neg_keys))
+        np.testing.assert_array_equal(
+            np.asarray(session_frontier(state)),
+            np.asarray(boruvka_frontier(u, v, labels, np.zeros(m, bool), n)))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_session_state_published_matches_from_scratch_frontier(seed):
+    """In-flight (published) pairs are assumed matching but excluded from the
+    frontier; the incremental state agrees with the from-scratch wrapper."""
+    rng = np.random.default_rng(100 + seed)
+    n, u, v, truth = _random_world(rng)
+    m = len(u)
+    state = make_session_state(u, v, n)
+    # reveal a third of the labels, publish a random subset of the rest
+    reveal = rng.permutation(m)[:max(m // 3, 1)]
+    upd = np.full(m, UNKNOWN, np.int32)
+    upd[reveal] = truth[reveal]
+    state = session_apply_answers(state, jnp.asarray(upd))
+    labels = np.asarray(state.labels)
+    published = (rng.random(m) < 0.4) & (labels == UNKNOWN)
+    state = session_mark_published(state, jnp.asarray(published))
+    np.testing.assert_array_equal(
+        np.asarray(session_frontier(state)),
+        np.asarray(boruvka_frontier(u, v, labels, published, n)))
+    # deduction skips published pairs (their answers are in flight)
+    ded = np.asarray(session_deduce(state).labels)
+    assert (ded[published] == labels[published]).all()
+
+
+def test_session_deduce_matches_from_scratch_without_published():
+    rng = np.random.default_rng(9)
+    n, u, v, truth = _random_world(rng)
+    m = len(u)
+    reveal = rng.permutation(m)[:m // 2]
+    labels = np.full(m, UNKNOWN, np.int32)
+    labels[reveal] = truth[reveal]
+    state = session_from_labels(u, v, labels, np.zeros(m, bool), n)
+    from repro.core import deduce_sessions
+    want = np.asarray(deduce_sessions(u[None], v[None], labels[None], n))[0]
+    got = np.asarray(session_deduce(state).labels)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Shared pair-key-overflow guard (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def test_pair_key_guard_x64_off_boundary():
+    """With x64 disabled (the test default) keys are int32: n = 46340 is the
+    last universe whose n*n fits below 2**31; 46341 must be rejected by both
+    the predicate and canonical_keys."""
+    import jax
+    if jax.config.jax_enable_x64:
+        pytest.skip("x64 enabled — int32 boundary not in effect")
+    assert pair_key_bits() == 31
+    n_ok, n_bad = 46340, 46341
+    assert n_ok * n_ok < 2 ** 31 <= n_bad * n_bad
+    assert pair_keys_fit(n_ok)
+    assert not pair_keys_fit(n_bad)
+    r = jnp.zeros(3, jnp.int32)
+    canonical_keys(r, r, n_ok)  # fine
+    with pytest.raises(ValueError, match="overflows"):
+        canonical_keys(r, r, n_bad)

@@ -1,6 +1,7 @@
-"""Scale-out join pipeline (DESIGN.md §7): sharded candidate generation must
-match the single-device kernel, and the batched multi-session engine must
-match the per-session engine pair-for-pair."""
+"""Scale-out join pipeline (DESIGN.md §7, §8): sharded candidate generation
+must match the single-device kernel, the batched multi-session engine must
+match the per-session engine pair-for-pair, and the async gateway serving
+path must beat the round barrier in simulated platform minutes."""
 import itertools
 import subprocess
 import sys
@@ -11,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (NEG, POS, NoisyCrowd, PerfectCrowd, crowdsourced_join,
+from repro.core import (NEG, POS, LatencyModel, NoisyCrowd, PerfectCrowd,
+                        crowdsourced_join, engine_dispatches,
                         label_parallel_jax, label_parallel_jax_batch)
 from repro.core.pairs import PairSet
 
@@ -177,6 +179,8 @@ def test_join_service_matches_single_session(crowd_factory):
         assert got.round_sizes == ref.batch_sizes
         assert got.n_hits == ref.n_hits
         assert got.cost_cents == ref.cost_cents
+        # device-side fold counter agrees with the host round accounting
+        assert got.fold_rounds == got.n_rounds
 
 
 def test_join_service_streaming_submit_between_runs():
@@ -209,6 +213,104 @@ def test_join_service_zero_pair_request():
     assert len(res[r_empty].labels) == 0
     assert res[r_empty].n_crowdsourced == 0 and res[r_empty].n_rounds == 0
     assert len(res[r_real].labels) > 0  # the real session still completes
+
+
+def _latency_sessions(seed: int, n_sessions: int = 4):
+    """Sessions whose likelihoods correlate with truth (the machine-phase
+    assumption), so non-matching-first steering has something to steer on."""
+    from repro.data.entities import make_session_pairsets
+
+    return make_session_pairsets(n_sessions, seed=seed, n_objects=(12, 24),
+                                 n_pairs=(20, 60))
+
+
+def test_async_gateway_beats_round_barrier_sim_minutes():
+    """Figure 16 semantics in the serving path (DESIGN.md §8): with the same
+    latency-modeled platform, the event-driven ID/NF discipline must finish
+    the workload in fewer simulated minutes than the round barrier, with
+    identical final labels."""
+    from repro.serve.join_service import JoinService
+
+    pairsets = _latency_sessions(0)
+    latency = lambda: LatencyModel(n_workers=6, mean_minutes=30.0, sigma=1.0,
+                                   seed=7)
+    svc_b = JoinService(lanes=2, latency=latency(), async_mode=False)
+    rids_b = [svc_b.submit(ps, PerfectCrowd()) for ps in pairsets]
+    res_b = svc_b.run()
+    barrier_min = max(res_b[r].sim_minutes for r in rids_b)
+
+    svc_a = JoinService(lanes=2, latency=latency(), async_mode=True, nf=True)
+    rids_a = [svc_a.submit(ps, PerfectCrowd()) for ps in pairsets]
+    res_a = svc_a.run()
+    async_min = max(res_a[r].sim_minutes for r in rids_a)
+
+    for rb, ra, ps in zip(rids_b, rids_a, pairsets):
+        np.testing.assert_array_equal(res_b[rb].labels, ps.truth)
+        np.testing.assert_array_equal(res_a[ra].labels, ps.truth)
+    assert barrier_min > 0 and async_min > 0
+    assert async_min < barrier_min, (async_min, barrier_min)
+
+
+def test_incremental_service_dispatches_less_than_from_scratch():
+    """Per round, the persistent-state serving path must issue fewer
+    host->device dispatches than an old-style from-scratch round loop over
+    the same sessions (DESIGN.md §8).  The from-scratch baseline is the
+    benchmark's, so the test asserts exactly what the bench reports."""
+    from benchmarks.bench_join_service import _run_from_scratch_rounds
+    from repro.serve.join_service import JoinService
+
+    # uniform size range so all lanes share one (p_cap, n_cap) bucket group
+    from repro.data.entities import make_session_pairsets
+    pairsets = make_session_pairsets(4, seed=19, n_objects=(10, 16),
+                                     n_pairs=(20, 31), n_entities=4)
+
+    # incremental: the JoinService path
+    engine_dispatches.reset()
+    svc = JoinService(lanes=4)
+    rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
+    res = svc.run()
+    rounds_inc = max(res[r].n_rounds for r in rids)
+    d_inc = engine_dispatches.count
+
+    # from-scratch: the benchmark's pre-§8 round loop (re-pack + rebuild)
+    from repro.core import get_order
+    perms = [get_order(ps, "expected") for ps in pairsets]
+    ordered = [ps.take(p) for ps, p in zip(pairsets, perms)]
+    sessions = [(np.asarray(o.u), np.asarray(o.v), o.n_objects)
+                for o in ordered]
+    truths = [np.where(o.truth, POS, NEG).astype(np.int32) for o in ordered]
+    labels_fs, _, dispatches_fs = _run_from_scratch_rounds(sessions, truths)
+    rounds_fs, d_fs = len(dispatches_fs), sum(dispatches_fs)
+
+    assert rounds_fs > 0 and rounds_inc > 0
+    # normalize per round: the incremental path must dispatch strictly less
+    assert d_inc / max(rounds_inc, 1) < d_fs / rounds_fs, (d_inc, d_fs)
+    # and both paths agree on the labels
+    for b, (rid, ps) in enumerate(zip(rids, pairsets)):
+        want = np.zeros(len(ps), bool)
+        want[perms[b]] = labels_fs[b, :len(ps)] == POS
+        np.testing.assert_array_equal(res[rid].labels, want)
+
+
+def test_submit_embeddings_capacity_overflow_reports_details():
+    """Candidate overflow must surface the observed drop count and the
+    per-device capacity actually used, not an opaque error."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.join_service import JoinService
+
+    rng = np.random.default_rng(5)
+    cents = rng.normal(size=(4, 16))
+    ids_a = rng.integers(0, 4, 24)
+    ids_b = rng.integers(0, 4, 20)
+    ea = jnp.asarray(cents[ids_a] + 0.1 * rng.normal(size=(24, 16)),
+                     jnp.float32)
+    eb = jnp.asarray(cents[ids_b] + 0.1 * rng.normal(size=(20, 16)),
+                     jnp.float32)
+    svc = JoinService(lanes=1)
+    mesh = make_host_mesh(1, 1)
+    with pytest.raises(RuntimeError, match=r"dropped at per-device capacity 2"):
+        svc.submit_embeddings(ea, eb, 0.5, mesh, capacity=2,
+                              impl="interpret")
 
 
 def test_join_service_embeddings_end_to_end():
