@@ -1,6 +1,6 @@
-"""Scale-out join pipeline throughput (DESIGN.md §7, §8).
+"""Scale-out join pipeline throughput (DESIGN.md §7, §8, §9).
 
-Three stages, benchmarked separately:
+Stages, benchmarked separately:
 
 * machine phase — pairs-scored/s through the sharded candidate driver
   (dense grid scored + thresholded + compacted on device);
@@ -8,7 +8,11 @@ Three stages, benchmarked separately:
   (frontier -> crowd -> deduce rounds over persistent session states);
 * engine rounds — the §8 comparison: per-round engine milliseconds and
   host->device dispatch counts for the incremental ``SessionState`` path vs
-  an old-style from-scratch round loop, on a 16-lane workload.
+  an old-style from-scratch round loop, on a 16-lane workload;
+* conflict folding — the §9 noisy-serving stage: NoisyCrowd sessions that
+  provably contradict transitivity, served under both conflict policies;
+  reports conflicts detected / requeried and checks the final labels stay
+  transitively consistent (the CI smoke asserts on this payload).
 
 Besides the harness CSV rows, emits one ``# JSON`` line with the raw
 numbers for the perf trajectory.  Set ``BENCH_JOIN_TINY=1`` for a
@@ -135,7 +139,7 @@ def _run_incremental_rounds(sessions, truths):
             if len(idx):
                 updates[b, idx] = truths[b][idx]
         engine_dispatches.add()  # updates upload
-        state = session_fold_answers_batch(state, jnp.asarray(updates))
+        state, _ = session_fold_answers_batch(state, jnp.asarray(updates))
         labels = np.asarray(state.labels)
         ms.append((time.perf_counter() - t0) * 1e3)
         dispatches.append(engine_dispatches.count)
@@ -249,6 +253,48 @@ def _bench_async_gateway(out: list, payload: dict) -> None:
         f"speedup={mins['barrier'] / max(mins['async_id_nf'], 1e-9):.2f}x"))
 
 
+def _bench_conflict_folding(out: list, payload: dict) -> None:
+    """DESIGN.md §9: noisy sessions through both conflict policies.  The
+    3-way majority vote at 35% worker error contradicts transitivity on this
+    seeded workload, so ``n_conflicts > 0`` is deterministic; every run must
+    still end transitively consistent."""
+    from repro.core import NoisyCrowd, transitively_consistent
+    from repro.data.entities import make_session_pairsets
+    from repro.serve.join_service import JoinService
+
+    pairsets = make_session_pairsets(3, seed=1, n_objects=(25, 35),
+                                     n_pairs=(120, 200), n_entities=4,
+                                     likelihood=(0.7, 0.4, 0.25))
+    stats = {}
+    for policy in ("drop", "requery"):
+        svc = JoinService(lanes=3, conflict_policy=policy)
+        rids = [svc.submit(ps, NoisyCrowd(error_rate=0.35,
+                                          qualification=False, seed=10 + k))
+                for k, ps in enumerate(pairsets)]
+        t0 = time.perf_counter()
+        res = svc.run()
+        secs = time.perf_counter() - t0
+        stats[policy] = {
+            "n_conflicts": sum(res[r].n_conflicts for r in rids),
+            "n_requeried": sum(res[r].n_requeried for r in rids),
+            "consistent": all(
+                transitively_consistent(ps, res[r].labels)
+                for r, ps in zip(rids, pairsets)),
+            "f_measure": float(np.mean(
+                [res[r].quality.f_measure for r in rids])),
+            "secs": secs,
+        }
+        out.append(row(
+            f"join_service/conflicts_{policy}", secs * 1e6 / len(pairsets),
+            f"n_conflicts={stats[policy]['n_conflicts']} "
+            f"n_requeried={stats[policy]['n_requeried']} "
+            f"consistent={stats[policy]['consistent']} "
+            f"F={stats[policy]['f_measure']:.2f}"))
+    payload["conflicts"] = {
+        "sessions": len(pairsets), "error_rate": 0.35, "policies": stats,
+    }
+
+
 def run() -> list:
     out: list = []
     payload: dict = {}
@@ -256,5 +302,6 @@ def run() -> list:
     _bench_human_phase(out, payload)
     _bench_engine_rounds(out, payload)
     _bench_async_gateway(out, payload)
+    _bench_conflict_folding(out, payload)
     out.append("# JSON " + json.dumps({"bench_join_service": payload}))
     return out

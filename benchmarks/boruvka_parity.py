@@ -31,7 +31,7 @@ def run() -> list:
                 jnp.zeros(len(ordered), bool), ordered.n_objects)
             jax_sel = set(np.nonzero(np.asarray(fr))[0].tolist())
         truth = np.where(ordered.truth, POS, NEG).astype(np.int32)
-        labels, cs, rounds = label_parallel_jax(
+        labels, cs, rounds, _ = label_parallel_jax(
             ordered.u, ordered.v, ordered.n_objects,
             lambda idx: truth[idx])
         oracle = crowdsourced_join(cand, PerfectCrowd(), order="expected",

@@ -1,0 +1,79 @@
+"""Quality vs worker error rate through the conflict-aware serving path
+(DESIGN.md §9) — the shape of the paper's §6.4 quality results.
+
+The paper's AMT deployment (3-way majority vote + qualification tests)
+reports precision/recall/F over real noisy workers; here the same sweep runs
+synthetically: one seeded workload served by ``JoinService`` at increasing
+per-assignment error rates, under both conflict policies.  Reported per
+cell: F-measure, conflicts detected, requery escalations, and whether the
+final labels stayed transitively consistent (they must — the §9 screening
+guarantees it at any error rate).
+
+Emits CSV rows plus one ``# JSON`` payload line for the quality trajectory.
+``BENCH_JOIN_TINY=1`` shrinks the sweep for the CI smoke.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import row
+
+
+def _tiny() -> bool:
+    return os.environ.get("BENCH_JOIN_TINY", "") not in ("", "0")
+
+
+def run() -> list:
+    from repro.core import NoisyCrowd, transitively_consistent
+    from repro.data.entities import make_session_pairsets
+    from repro.serve.join_service import JoinService
+
+    error_rates = [0.0, 0.1, 0.35] if _tiny() else [0.0, 0.05, 0.1, 0.2,
+                                                    0.35, 0.45]
+    n_sessions = 2 if _tiny() else 4
+    pairsets = make_session_pairsets(n_sessions, seed=1, n_objects=(25, 35),
+                                     n_pairs=(120, 200), n_entities=4,
+                                     likelihood=(0.7, 0.4, 0.25))
+    out: list = []
+    payload: dict = {"error_rates": error_rates, "sessions": n_sessions,
+                     "cells": []}
+    for err in error_rates:
+        for policy in ("drop", "requery"):
+            svc = JoinService(lanes=2, conflict_policy=policy)
+            rids = [svc.submit(ps, NoisyCrowd(error_rate=err,
+                                              qualification=False,
+                                              seed=10 + k))
+                    for k, ps in enumerate(pairsets)]
+            t0 = time.perf_counter()
+            res = svc.run()
+            secs = time.perf_counter() - t0
+            cell = {
+                "error_rate": err,
+                "policy": policy,
+                "f_measure": float(np.mean(
+                    [res[r].quality.f_measure for r in rids])),
+                "precision": float(np.mean(
+                    [res[r].quality.precision for r in rids])),
+                "recall": float(np.mean(
+                    [res[r].quality.recall for r in rids])),
+                "n_conflicts": sum(res[r].n_conflicts for r in rids),
+                "n_requeried": sum(res[r].n_requeried for r in rids),
+                "n_crowdsourced": sum(res[r].n_crowdsourced for r in rids),
+                "consistent": all(
+                    transitively_consistent(ps, res[r].labels)
+                    for r, ps in zip(rids, pairsets)),
+            }
+            payload["cells"].append(cell)
+            out.append(row(
+                f"noise_sweep/e{err:g}_{policy}",
+                secs * 1e6 / len(pairsets),
+                f"F={cell['f_measure']:.2f} P={cell['precision']:.2f} "
+                f"R={cell['recall']:.2f} conflicts={cell['n_conflicts']} "
+                f"requeried={cell['n_requeried']} "
+                f"consistent={cell['consistent']}"))
+    out.append("# JSON " + json.dumps({"noise_sweep": payload}))
+    return out

@@ -18,11 +18,12 @@ from .jax_graph import (NEG, POS, UNKNOWN, SessionState, boruvka_frontier,
                         session_fold_answers, session_fold_answers_batch,
                         session_from_labels, session_frontier,
                         session_frontier_batch, session_mark_published,
-                        session_mark_published_batch)
+                        session_mark_published_batch, session_trust_graph,
+                        session_trust_graph_batch)
 from .join import JoinResult, crowdsourced_join
 from .labeling import (LabelingResult, label_all_crowdsourced,
                        label_sequential)
-from .metrics import Quality, quality
+from .metrics import Quality, quality, transitively_consistent
 from .pairs import PairSet
 from .parallel import (StreamTrace, WallClock, deduction_sweep,
                        label_parallel, parallel_crowdsourced_pairs,
@@ -52,7 +53,9 @@ __all__ = [
     "session_deduce", "session_deduce_batch",
     "session_fold_answers", "session_fold_answers_batch",
     "session_mark_published", "session_mark_published_batch",
+    "session_trust_graph", "session_trust_graph_batch",
     "pair_key_bits", "pair_keys_fit", "engine_dispatches",
     "CrowdGateway", "CrowdTicket", "CrowdAnswer",
     "crowdsourced_join", "JoinResult", "quality", "Quality",
+    "transitively_consistent",
 ]

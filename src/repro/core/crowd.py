@@ -42,6 +42,17 @@ class Crowd:
     def ask(self, pairs: PairSet, i: int) -> str:
         raise NotImplementedError
 
+    def ask_votes(self, pairs: PairSet, i: int,
+                  n_assignments: Optional[int] = None
+                  ) -> Tuple[str, Tuple[int, ...]]:
+        """Majority label plus the per-assignment votes behind it, in engine
+        encoding (POS / NEG).  ``n_assignments`` overrides the platform
+        default — the requery escalation path (DESIGN.md §9) re-posts
+        rejected pairs with more assignments.  Deterministic crowds have a
+        single unanimous vote."""
+        lab = self.ask(pairs, i)
+        return lab, (POS if lab == MATCH else NEG,)
+
     def reset(self) -> None:
         self.n_asked = 0
 
@@ -57,28 +68,62 @@ class NoisyCrowd(Crowd):
                  qualification: bool = True, seed: int = 0):
         # qualification tests (§6.4) screen the worst workers: model as a
         # multiplicative reduction of the base error rate.
+        _require_odd(n_assignments)
         self.error_rate = error_rate * (0.7 if qualification else 1.0)
         self.n_assignments = n_assignments
         self.rng = np.random.default_rng(seed)
         self.n_asked = 0
 
     def ask(self, pairs: PairSet, i: int) -> str:
+        return self.ask_votes(pairs, i)[0]
+
+    def ask_votes(self, pairs: PairSet, i: int,
+                  n_assignments: Optional[int] = None
+                  ) -> Tuple[str, Tuple[int, ...]]:
+        k = self.n_assignments if n_assignments is None else n_assignments
+        _require_odd(k)
         self.n_asked += 1
         true_match = bool(pairs.truth[i])
-        votes = self.rng.random(self.n_assignments) >= self.error_rate
-        # votes True = worker answers correctly
-        n_true = int(votes.sum())
-        maj_correct = n_true * 2 > self.n_assignments
+        correct = self.rng.random(k) >= self.error_rate
+        # correct True = worker answers the truth; vote is the worker's label
+        votes = tuple(
+            (POS if true_match else NEG) if c else (NEG if true_match else POS)
+            for c in correct)
+        maj_correct = int(correct.sum()) * 2 > k
         match = true_match if maj_correct else not true_match
-        return MATCH if match else NON_MATCH
+        return (MATCH if match else NON_MATCH), votes
 
-    def pair_error_rate(self) -> float:
-        """Analytic majority-vote error for sanity checks."""
-        e, k = self.error_rate, self.n_assignments
+    def pair_error_rate(self, n_assignments: Optional[int] = None) -> float:
+        """Analytic majority-vote error for sanity checks.  The closed form
+        counts strict worker-error majorities, which is exact only for odd
+        ``k`` — enforced at construction (a tied even-``k`` vote would
+        silently resolve to the wrong label)."""
+        e = self.error_rate
+        k = self.n_assignments if n_assignments is None else n_assignments
+        _require_odd(k)
         return sum(
             math.comb(k, j) * e**j * (1 - e) ** (k - j)
             for j in range(k // 2 + 1, k + 1)
         )
+
+    def expected_minority_fraction(self) -> float:
+        """Analytic E[minority votes / k] — the inter-worker disagreement a
+        platform can *measure* without ground truth; compare with the
+        gateway's ``measured_disagreement``."""
+        e, k = self.error_rate, self.n_assignments
+        return sum(
+            math.comb(k, j) * e**j * (1 - e) ** (k - j) * min(j, k - j) / k
+            for j in range(k + 1)
+        )
+
+
+def _require_odd(n_assignments: int) -> None:
+    if n_assignments < 1 or n_assignments % 2 == 0:
+        raise ValueError(
+            f"n_assignments must be odd and positive, got {n_assignments}: "
+            "an even vote can tie, and a tie silently resolves to the wrong "
+            "label (majority is defined as n_true * 2 > k); the analytic "
+            "pair_error_rate also assumes odd k")
 
 
 @dataclasses.dataclass
@@ -129,12 +174,28 @@ class CrowdTicket:
 
 @dataclasses.dataclass(frozen=True)
 class CrowdAnswer:
-    """One completed pair label, in engine encoding (POS / NEG)."""
+    """One completed pair label, in engine encoding (POS / NEG).
+
+    ``votes`` carries every per-assignment vote behind the majority label
+    (DESIGN.md §9): the serving layer and the error-tolerance accounting see
+    the raw ballot, not just its collapse."""
 
     rid: int
     index: int
     label: int
     minutes: float      # simulated completion time (0.0 in immediate mode)
+    votes: Tuple[int, ...] = ()   # per-assignment votes (POS / NEG)
+
+    @property
+    def n_assignments(self) -> int:
+        return len(self.votes)
+
+    @property
+    def agreement(self) -> float:
+        """Fraction of assignments that voted with the majority label."""
+        if not self.votes:
+            return 1.0
+        return sum(v == self.label for v in self.votes) / len(self.votes)
 
 
 class CrowdGateway:
@@ -159,31 +220,53 @@ class CrowdGateway:
       the §5.2 non-matching-first steering), each assignment completes after
       a lognormal number of minutes, and ``poll`` advances the clock to the
       next completion event.  ``now_minutes`` is the simulated wall clock.
+
+    Error tolerance (DESIGN.md §9): answers carry the per-assignment votes
+    behind their majority label; ``requery(rid, pairs, indices, crowd)``
+    re-posts pairs whose answers the engine rejected as contradictory, with
+    an escalated assignment count (+2 per attempt: 3-way → 5-way), and
+    reports pairs past ``max_requeries`` as *exhausted* so the caller can
+    fall back to trusting the graph.  ``measured_disagreement`` aggregates
+    minority-vote fractions across every posted ballot — the empirical
+    error signal a real platform can observe without ground truth.
     """
 
     def __init__(self, latency: Optional[LatencyModel] = None,
-                 nf: bool = False):
+                 nf: bool = False, max_requeries: int = 1):
         if latency is not None and latency.n_workers <= 0:
             raise ValueError(
                 f"CrowdGateway needs a positive worker pool, got "
                 f"n_workers={latency.n_workers} — in-flight pairs could "
                 "never complete")
+        if nf and latency is None:
+            raise ValueError(
+                "nf=True requires a LatencyModel: non-matching-first steers "
+                "which waiting pair a worker picks up next, and the "
+                "immediate-mode poll answers everything at once, so the "
+                "steering would be a silent no-op")
         self.latency = latency
         self.nf = nf
+        self.max_requeries = max_requeries
         # randomness (worker pick + assignment latency) exists only in
         # latency mode and is seeded by the LatencyModel
         self._rng = latency.sampler() if latency is not None else None
         # waiting: posted, not yet picked up by a worker (immediate mode:
-        # not yet polled).  Entries: (rid, index, label, likelihood).
-        self._waiting: List[Tuple[int, int, int, float]] = []
-        # running: (t_done, seq, rid, index, label) min-heap on t_done
-        self._running: List[Tuple[float, int, int, int, int]] = []
+        # not yet polled).  Entries: (rid, index, label, likelihood, votes).
+        self._waiting: List[Tuple[int, int, int, float, Tuple[int, ...]]] = []
+        # running: (t_done, seq, rid, index, label, votes) min-heap on t_done
+        self._running: List[
+            Tuple[float, int, int, int, int, Tuple[int, ...]]] = []
         self._free_workers = latency.n_workers if latency is not None else 0
         self._now = 0.0
         self._seq = 0
         self._next_tid = 0
+        # requery bookkeeping: attempts per (rid, index)
+        self._attempts: dict = {}
         self.n_posted = 0
         self.n_answered = 0
+        self.n_requeried = 0
+        self.n_votes = 0
+        self.n_minority_votes = 0
 
     @property
     def now_minutes(self) -> float:
@@ -193,20 +276,63 @@ class CrowdGateway:
     def in_flight(self) -> int:
         return len(self._waiting) + len(self._running)
 
+    @property
+    def measured_disagreement(self) -> float:
+        """Observed minority-vote fraction over all posted assignments —
+        the empirical counterpart of
+        :meth:`NoisyCrowd.expected_minority_fraction`."""
+        return self.n_minority_votes / max(self.n_votes, 1)
+
+    def _enqueue(self, rid: int, pairs: PairSet, indices, crowd: Crowd,
+                 n_assignments: Optional[int] = None) -> Tuple[int, ...]:
+        indices = tuple(int(i) for i in indices)
+        for i in indices:
+            lab, votes = crowd.ask_votes(pairs, i, n_assignments)
+            label = POS if lab == MATCH else NEG
+            self.n_votes += len(votes)
+            self.n_minority_votes += sum(v != label for v in votes)
+            self._waiting.append(
+                (rid, i, label, float(pairs.likelihood[i]), votes))
+        self.n_posted += len(indices)
+        if self.latency is not None:
+            self._assign()
+        return indices
+
     def post(self, rid: int, pairs: PairSet, indices,
              crowd: Crowd) -> CrowdTicket:
         """Post a batch of pair indices; the crowd is asked per pair here
         (batched transport), answers surface later via ``poll``."""
-        indices = [int(i) for i in indices]
-        for i in indices:
-            label = POS if crowd.ask(pairs, i) == MATCH else NEG
-            self._waiting.append((rid, i, label, float(pairs.likelihood[i])))
-        self.n_posted += len(indices)
-        if self.latency is not None:
-            self._assign()
+        indices = self._enqueue(rid, pairs, indices, crowd)
         tid = self._next_tid
         self._next_tid += 1
-        return CrowdTicket(tid=tid, rid=rid, indices=tuple(indices))
+        return CrowdTicket(tid=tid, rid=rid, indices=indices)
+
+    def requery(self, rid: int, pairs: PairSet, indices, crowd: Crowd
+                ) -> Tuple[CrowdTicket, List[int]]:
+        """Escalation path for rejected answers (DESIGN.md §9): re-post each
+        pair with ``crowd.n_assignments + 2 * attempt`` assignments (3-way →
+        5-way by default).  Pairs already requeried ``max_requeries`` times
+        are NOT re-posted; they come back in the second element — exhausted,
+        for the caller to resolve by trusting the graph.  Returns
+        ``(ticket over the re-posted pairs, exhausted indices)``."""
+        base = getattr(crowd, "n_assignments", 1)
+        by_escalation: dict = {}
+        exhausted: List[int] = []
+        for i in (int(j) for j in indices):
+            attempt = self._attempts.get((rid, i), 0)
+            if attempt >= self.max_requeries:
+                exhausted.append(i)
+                continue
+            self._attempts[(rid, i)] = attempt + 1
+            by_escalation.setdefault(base + 2 * (attempt + 1), []).append(i)
+        posted: List[int] = []
+        for k, idx in sorted(by_escalation.items()):
+            posted.extend(self._enqueue(rid, pairs, idx, crowd,
+                                        n_assignments=k))
+        self.n_requeried += len(posted)
+        tid = self._next_tid
+        self._next_tid += 1
+        return CrowdTicket(tid=tid, rid=rid, indices=tuple(posted)), exhausted
 
     def _assign(self) -> None:
         """Free workers pick up waiting pairs (NF: lowest likelihood first)."""
@@ -218,10 +344,10 @@ class CrowdGateway:
                                        self._waiting[j][1]))
             else:
                 k = int(self._rng.integers(len(self._waiting)))
-            rid, idx, label, _ = self._waiting.pop(k)
+            rid, idx, label, _, votes = self._waiting.pop(k)
             dt = float(self.latency.draw_minutes(self._rng, 1)[0])
             heapq.heappush(self._running,
-                           (self._now + dt, self._seq, rid, idx, label))
+                           (self._now + dt, self._seq, rid, idx, label, votes))
             self._seq += 1
             self._free_workers -= 1
 
@@ -230,8 +356,8 @@ class CrowdGateway:
         clock to the next completion event and return the answers landing
         there (freed workers immediately pick up waiting pairs)."""
         if self.latency is None:
-            out = [CrowdAnswer(rid, i, lab, self._now)
-                   for rid, i, lab, _ in self._waiting]
+            out = [CrowdAnswer(rid, i, lab, self._now, votes)
+                   for rid, i, lab, _, votes in self._waiting]
             self._waiting.clear()
             self.n_answered += len(out)
             return out
@@ -240,8 +366,8 @@ class CrowdGateway:
         t0 = self._running[0][0]
         out: List[CrowdAnswer] = []
         while self._running and self._running[0][0] <= t0 + 1e-12:
-            t, _, rid, idx, label = heapq.heappop(self._running)
-            out.append(CrowdAnswer(rid, idx, label, t))
+            t, _, rid, idx, label, votes = heapq.heappop(self._running)
+            out.append(CrowdAnswer(rid, idx, label, t, votes))
             self._free_workers += 1
         self._now = max(self._now, t0)
         self._assign()

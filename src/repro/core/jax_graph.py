@@ -23,11 +23,27 @@ State transformations (all jitted, state-in/state-out):
 * ``session_frontier``  — priority-Borůvka selection (parallel Algorithm 3)
   over the live forest; published (in-flight) pairs are assumed matching but
   excluded from the output (the §5.2 instant-decision contract).
-* ``session_apply_answers`` — fold crowd answers into labels/roots/neg_keys.
+* ``session_apply_answers`` — fold crowd answers into labels/roots/neg_keys,
+  **conflict-aware** (DESIGN.md §9): every incoming answer is screened
+  against the live state; an answer contradicting the deduced label is
+  rejected (the label stays UNKNOWN until deduction fills it, or until the
+  serving layer requeries), counted in the per-pair ``conflicts`` field, and
+  returned in a conflict mask — bit-identical to feeding the same stream
+  through ``ClusterGraph.add_label`` one answer at a time.
 * ``session_deduce``    — one deduction sweep (Algorithm 1 batched) over the
   maintained roots + neg-key index; published pairs are skipped (their
   answers are in flight).
 * ``session_fold_answers`` — apply + deduce fused into one dispatch.
+* ``session_trust_graph`` — the requery ladder's endpoint: un-publish a set
+  of exhausted pairs and let deduction label them from the graph.
+
+Conflict screening is two-speed: an optimistic all-answers union is checked
+for *self-keys* (a negative edge whose endpoints landed in one cluster —
+the corruption signature).  A fold with no self-key provably has no
+conflict under sequential semantics and takes the same fully-parallel path
+as before; a fold with one falls back (``lax.cond``) to an exact
+sequential replay that reproduces the oracle's answer-at-a-time semantics
+in pair-index order.
 
 ``*_batch`` variants are ``vmap``s over stacked states that advance B
 independent join sessions per device dispatch (DESIGN.md §7).
@@ -232,6 +248,17 @@ def _in_sorted(sorted_keys: jax.Array, queries: jax.Array) -> jax.Array:
     return sorted_keys[idx] == queries
 
 
+def _decompose_keys(keys: jax.Array, n_objects: int):
+    """Split canonical ``lo * n + hi`` keys back into endpoint ids.
+    Returns (lo, hi, is_pad); pad slots decompose to (0, 0)."""
+    sentinel = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
+    is_pad = keys == sentinel
+    nn = jnp.asarray(n_objects, keys.dtype)
+    lo = jnp.where(is_pad, 0, keys // nn).astype(jnp.int32)
+    hi = jnp.where(is_pad, 0, keys % nn).astype(jnp.int32)
+    return lo.clip(0, n_objects - 1), hi.clip(0, n_objects - 1), is_pad
+
+
 def _rekey_impl(sorted_keys: jax.Array, roots: jax.Array,
                 n_objects: int) -> jax.Array:
     """Re-canonicalize a sorted neg-key array after unions moved roots:
@@ -241,12 +268,7 @@ def _rekey_impl(sorted_keys: jax.Array, roots: jax.Array,
     new roots (DESIGN.md §8 invariant)."""
     kdt = sorted_keys.dtype
     sentinel = jnp.asarray(jnp.iinfo(kdt).max, kdt)
-    is_pad = sorted_keys == sentinel
-    n = jnp.asarray(n_objects, kdt)
-    lo = jnp.where(is_pad, 0, sorted_keys // n).astype(jnp.int32)
-    hi = jnp.where(is_pad, 0, sorted_keys % n).astype(jnp.int32)
-    lo = lo.clip(0, n_objects - 1)
-    hi = hi.clip(0, n_objects - 1)
+    lo, hi, is_pad = _decompose_keys(sorted_keys, n_objects)
     new = canonical_keys(roots[lo], roots[hi], n_objects)
     new = jnp.where(is_pad, sentinel, new)
     return jnp.sort(new)
@@ -297,7 +319,7 @@ def deduce_batch(roots: jax.Array, sorted_neg: jax.Array, qu: jax.Array,
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=("u", "v", "labels", "published", "roots", "neg_keys",
-                 "rounds"),
+                 "rounds", "conflicts"),
     meta_fields=("n_objects",),
 )
 @dataclasses.dataclass
@@ -308,10 +330,13 @@ class SessionState:
     connected components of the POS-labeled edges, and ``neg_keys`` is the
     sorted multiset of canonical root-pair keys of the NEG-labeled edges
     under those roots (sentinel-padded to shape (P,)).  Both are therefore
-    bit-identical to a from-scratch rebuild from ``labels`` at any point.
+    bit-identical to a from-scratch rebuild from ``labels`` at any point —
+    which holds even under noisy answer streams, because contradictory
+    answers are rejected at the fold (DESIGN.md §9) rather than folded in.
     ``published`` marks in-flight pairs (posted to the crowd, no answer yet);
-    ``rounds`` counts answer folds.  ``n_objects`` is static metadata so the
-    state jits with stable cache keys.
+    ``rounds`` counts answer folds; ``conflicts`` counts rejected answers
+    per pair.  ``n_objects`` is static metadata so the state jits with
+    stable cache keys.
     """
 
     u: jax.Array          # (P,) int32 pair endpoints, labeling order
@@ -321,6 +346,7 @@ class SessionState:
     roots: jax.Array      # (n_objects,) int32 union-find forest over POS edges
     neg_keys: jax.Array   # (P,) sorted canonical keys of NEG edges
     rounds: jax.Array     # () int32 answer-fold counter
+    conflicts: jax.Array  # (P,) int32 rejected contradictory answers per pair
     n_objects: int        # static
 
 
@@ -351,6 +377,7 @@ def make_session_state(u, v, n_objects: int, pair_capacity: int = 0,
         roots=jnp.arange(n_cap, dtype=jnp.int32),
         neg_keys=jnp.full((p_cap,), _key_sentinel(), _key_dtype()),
         rounds=jnp.int32(0),
+        conflicts=jnp.zeros(p_cap, jnp.int32),
         n_objects=n_cap,
     )
 
@@ -368,6 +395,7 @@ def make_session_state_batch(U, V, labels0, n_objects: int) -> SessionState:
                                (B, n_objects)),
         neg_keys=jnp.full((B, P), _key_sentinel(), _key_dtype()),
         rounds=jnp.zeros((B,), jnp.int32),
+        conflicts=jnp.zeros((B, P), jnp.int32),
         n_objects=int(n_objects),
     )
 
@@ -383,6 +411,7 @@ def _state_from_labels_impl(u, v, labels, published, n_objects: int
     negk = _neg_keys_impl(roots, u, v, labels == NEG, n_objects)
     return SessionState(u=u, v=v, labels=labels, published=published,
                         roots=roots, neg_keys=negk, rounds=jnp.int32(0),
+                        conflicts=jnp.zeros(u.shape, jnp.int32),
                         n_objects=n_objects)
 
 
@@ -401,22 +430,15 @@ def session_from_labels(u, v, labels, published, n_objects: int) -> SessionState
 
 
 # ---------------------------------------------------------------------------
-# State transformations (DESIGN.md §8): apply / deduce / fold / frontier
+# State transformations (DESIGN.md §8, §9): apply / deduce / fold / frontier
 # ---------------------------------------------------------------------------
-def _apply_impl(state: SessionState, updates: jax.Array,
-                count_round: bool) -> SessionState:
-    """Fold new labels into the state incrementally.
-
-    ``updates`` is (P,) int32, UNKNOWN where nothing landed.  POS labels hook
-    into the live forest via bounded pointer jumping; NEG labels are keyed
-    under the post-union roots and merged into the sorted neg-key array; the
-    existing keys are re-canonicalized only when a union actually moved a
-    root (``lax.cond``-gated, so the common no-union fold skips the sort)."""
+def _apply_fast(state: SessionState, updates: jax.Array, new: jax.Array,
+                pos_new: jax.Array, neg_new: jax.Array, roots: jax.Array):
+    """The conflict-free fold (the pre-§9 incremental path): all answers
+    accepted, fully parallel.  ``roots`` is the already-computed union over
+    every incoming POS edge."""
     n = state.n_objects
-    new = (updates != UNKNOWN) & (state.labels == UNKNOWN)
     labels = jnp.where(new, updates, state.labels)
-    pos_new = new & (updates == POS)
-    roots = _union_impl(state.roots, state.u, state.v, pos_new, n)
     sentinel = jnp.asarray(jnp.iinfo(state.neg_keys.dtype).max,
                            state.neg_keys.dtype)
     # re-key only when a union moved a root AND there are real keys to move
@@ -425,7 +447,6 @@ def _apply_impl(state: SessionState, updates: jax.Array,
     negk = jax.lax.cond(
         moved, lambda nk: _rekey_impl(nk, roots, n), lambda nk: nk,
         state.neg_keys)
-    neg_new = new & (updates == NEG)
     fresh = jnp.where(neg_new,
                       canonical_keys(roots[state.u], roots[state.v], n),
                       sentinel)
@@ -433,12 +454,152 @@ def _apply_impl(state: SessionState, updates: jax.Array,
         jnp.any(neg_new),
         lambda nk: _merge_sorted_impl(nk, jnp.sort(fresh)),
         lambda nk: nk, negk)
-    published = state.published & ~new
+    return labels, roots, negk, jnp.zeros(new.shape, bool)
+
+
+def _apply_sequential(state: SessionState, updates: jax.Array,
+                      new: jax.Array):
+    """Exact sequential replay of a conflicting fold (DESIGN.md §9).
+
+    Answers are applied one pair slot at a time in index order — pair order
+    IS the labeling order, so this reproduces ``ClusterGraph.add_label``
+    stream semantics bit-for-bit: an answer contradicting the evidence
+    accepted so far (same cluster for a NEG, negatively-adjacent clusters
+    for a POS) is rejected and flagged in the conflict mask; its label slot
+    stays UNKNOWN for deduction (or a requery) to settle.
+
+    The scan keeps ``roots`` fully compressed (one vectorized remap per
+    accepted union) and carries the neg-key multiset unsorted in a (2P,)
+    work array re-canonicalized after every union, so membership is a
+    linear compare; the final state is re-sorted once on exit and equals a
+    from-scratch rebuild from the surviving labels."""
+    n = state.n_objects
+    P = state.u.shape[0]
+    kdt = state.neg_keys.dtype
+    nn = jnp.asarray(n, kdt)
+    sentinel = jnp.asarray(jnp.iinfo(kdt).max, kdt)
+    negw0 = jnp.concatenate([state.neg_keys,
+                             jnp.full((P,), sentinel, kdt)])
+
+    def body(i, carry):
+        labels, roots, negw, cmask = carry
+        upd = updates[i]
+        active = new[i]
+        ru, rv = roots[state.u[i]], roots[state.v[i]]
+        same = ru == rv
+        lo = jnp.minimum(ru, rv).astype(kdt)
+        hi = jnp.maximum(ru, rv).astype(kdt)
+        key = lo * nn + hi
+        neg_hit = jnp.any(negw == key) & ~same
+        conflict = active & ((same & (upd == NEG)) | (neg_hit & (upd == POS)))
+        accept = active & ~conflict
+        acc_pos = accept & (upd == POS) & ~same  # same-root POS: no-op union
+        acc_neg = accept & (upd == NEG)
+        labels = labels.at[i].set(jnp.where(accept, upd, labels[i]))
+        # union: remap every vertex rooted at max(ru, rv) to min(ru, rv)
+        roots = jnp.where(acc_pos & (roots == jnp.maximum(ru, rv)),
+                          jnp.minimum(ru, rv), roots)
+        # re-canonicalize the work keys under the post-union forest
+        klo, khi, is_pad = _decompose_keys(negw, n)
+        rlo, rhi = roots[klo], roots[khi]
+        rekeyed = (jnp.minimum(rlo, rhi).astype(kdt) * nn
+                   + jnp.maximum(rlo, rhi).astype(kdt))
+        negw = jnp.where(acc_pos & ~is_pad, rekeyed, negw)
+        # an accepted NEG appends its key at the scratch slot for pair i
+        negw = negw.at[P + i].set(jnp.where(acc_neg, key, sentinel))
+        cmask = cmask.at[i].set(conflict)
+        return labels, roots, negw, cmask
+
+    labels, roots, negw, cmask = jax.lax.fori_loop(
+        0, P, body,
+        (state.labels, state.roots, negw0, jnp.zeros((P,), bool)))
+    # keys are already canonical under the final roots; real keys never
+    # exceed P (one per NEG-labeled pair), so the first P sorted slots hold
+    # them all — bit-identical to a from-scratch rebuild
+    return labels, roots, jnp.sort(negw)[:P], cmask
+
+
+def _screen_impl(state: SessionState, updates: jax.Array):
+    """The §9 conflict detector: run the optimistic union over every
+    incoming POS edge and look for *self-keys* — a negative edge (existing
+    or incoming) whose two endpoints land in one cluster.  Any contradiction
+    in the stream, against the prior state or between answers inside the
+    batch, produces a self-key under that union, so a clean check proves
+    the batch conflict-free.  Returns the masks, the optimistic roots (the
+    fast path's union — computed once), and the conflict flag."""
+    n = state.n_objects
+    new = (updates != UNKNOWN) & (state.labels == UNKNOWN)
+    pos_new = new & (updates == POS)
+    neg_new = new & (updates == NEG)
+    roots_opt = _union_impl(state.roots, state.u, state.v, pos_new, n)
+    olo, ohi, opad = _decompose_keys(state.neg_keys, n)
+    old_self = ~opad & (roots_opt[olo] == roots_opt[ohi])
+    fresh_self = neg_new & (roots_opt[state.u] == roots_opt[state.v])
+    has_conflict = jnp.any(old_self) | jnp.any(fresh_self)
+    return new, pos_new, neg_new, roots_opt, has_conflict
+
+
+def _finish_apply(state: SessionState, labels, roots, negk, cmask,
+                  new, count_round: bool, keep_conflicts_published: bool
+                  ) -> SessionState:
+    """Shared bookkeeping tail of every apply variant: published bits,
+    round counter, per-pair conflict counts.  Rejected pairs keep their
+    UNKNOWN label and increment ``conflicts``; their ``published`` bit is
+    cleared like any answered pair unless ``keep_conflicts_published`` (the
+    serving layer's requery policy) holds them in flight so the fused
+    deduce cannot settle them before the escalated answer returns."""
+    answered = new & ~cmask if keep_conflicts_published else new
+    published = state.published & ~answered
     rounds = state.rounds
     if count_round:
         rounds = rounds + jnp.any(new).astype(jnp.int32)
-    return dataclasses.replace(state, labels=labels, published=published,
-                               roots=roots, neg_keys=negk, rounds=rounds)
+    conflicts = state.conflicts + cmask.astype(jnp.int32)
+    return dataclasses.replace(
+        state, labels=labels, published=published, roots=roots,
+        neg_keys=negk, rounds=rounds, conflicts=conflicts)
+
+
+def _apply_impl(state: SessionState, updates: jax.Array, count_round: bool,
+                keep_conflicts_published: bool
+                ) -> Tuple[SessionState, jax.Array]:
+    """Fold new labels into the state incrementally, screening conflicts.
+
+    ``updates`` is (P,) int32, UNKNOWN where nothing landed.  A clean
+    ``_screen_impl`` check proves the batch conflict-free and the
+    fully-parallel fold applies (POS hooks by bounded pointer jumping, NEG
+    keys merged by ``searchsorted``, re-key ``lax.cond``-gated as before).
+    Otherwise an exact sequential replay reproduces the oracle's
+    answer-at-a-time drop semantics.  Returns ``(state, conflict_mask)``.
+
+    The ``lax.cond`` is a true branch only unbatched; under ``vmap`` it
+    lowers to a select that pays for both sides, so the batched wrappers
+    run the speculative `_apply_fast_flagged_impl` first and re-dispatch
+    here only when some session's screen actually fired."""
+    new, pos_new, neg_new, roots_opt, has_conflict = _screen_impl(state,
+                                                                  updates)
+    labels, roots, negk, cmask = jax.lax.cond(
+        has_conflict,
+        lambda: _apply_sequential(state, updates, new),
+        lambda: _apply_fast(state, updates, new, pos_new, neg_new,
+                            roots_opt))
+    return _finish_apply(state, labels, roots, negk, cmask, new,
+                         count_round, keep_conflicts_published), cmask
+
+
+def _apply_fast_flagged_impl(state: SessionState, updates: jax.Array,
+                             count_round: bool,
+                             keep_conflicts_published: bool):
+    """Speculative conflict-free apply: always takes the parallel path and
+    returns the screen flag alongside ``(state, conflict_mask)``.  The
+    caller must discard the result and fall back to the exact fold when the
+    flag fired (the state would contain the §9 corruption signature)."""
+    new, pos_new, neg_new, roots_opt, has_conflict = _screen_impl(state,
+                                                                  updates)
+    labels, roots, negk, cmask = _apply_fast(state, updates, new, pos_new,
+                                             neg_new, roots_opt)
+    return _finish_apply(state, labels, roots, negk, cmask, new,
+                         count_round, keep_conflicts_published), \
+        cmask, has_conflict
 
 
 def _deduce_impl(state: SessionState) -> SessionState:
@@ -469,8 +630,28 @@ def _deduce_impl(state: SessionState) -> SessionState:
     return dataclasses.replace(state, labels=labels, neg_keys=negk)
 
 
-def _fold_impl(state: SessionState, updates: jax.Array) -> SessionState:
-    return _deduce_impl(_apply_impl(state, updates, count_round=True))
+def _fold_impl(state: SessionState, updates: jax.Array,
+               keep_conflicts_published: bool
+               ) -> Tuple[SessionState, jax.Array]:
+    state, cmask = _apply_impl(state, updates, count_round=True,
+                               keep_conflicts_published=keep_conflicts_published)
+    return _deduce_impl(state), cmask
+
+
+def _fold_fast_flagged_impl(state: SessionState, updates: jax.Array,
+                            keep_conflicts_published: bool):
+    state, cmask, flag = _apply_fast_flagged_impl(
+        state, updates, count_round=True,
+        keep_conflicts_published=keep_conflicts_published)
+    return _deduce_impl(state), cmask, flag
+
+
+def _trust_graph_impl(state: SessionState, mask: jax.Array) -> SessionState:
+    """Requery-ladder endpoint (DESIGN.md §9): pairs whose escalated answers
+    kept conflicting are pulled out of flight and labeled by deduction —
+    the graph's evidence outvotes the crowd."""
+    state = dataclasses.replace(state, published=state.published & ~mask)
+    return _deduce_impl(state)
 
 
 def _frontier_impl(state: SessionState) -> jax.Array:
@@ -485,7 +666,14 @@ def _frontier_impl(state: SessionState) -> jax.Array:
     prio = jnp.arange(P, dtype=jnp.int32)
     inf = jnp.int32(P)
     unknown = state.labels == UNKNOWN
-    pub = state.published & unknown
+    # the optimistic assumption only covers pairs the graph does not already
+    # contradict: a published pair whose deduced label is NEG (a rejected
+    # noisy answer awaiting requery, DESIGN.md §9) must not be hooked in as
+    # matching — that union would cross a negative edge and corrupt the
+    # frontier's working state.  This matches Algorithm 3, which skips
+    # deducible pairs instead of inserting the optimistic label.
+    ded_now = _deduce_lookup_impl(state.roots, state.neg_keys, u, v, n)
+    pub = state.published & unknown & (ded_now != NEG)
     sentinel = jnp.asarray(jnp.iinfo(state.neg_keys.dtype).max,
                            state.neg_keys.dtype)
     # sorted index ⇒ a real key, if any, sits at slot 0; the count of real
@@ -541,16 +729,40 @@ def _mark_published_impl(state: SessionState, mask: jax.Array) -> SessionState:
 # jitted public entry points (counted host dispatches)
 _session_frontier_jit = jax.jit(_frontier_impl)
 _session_frontier_batch_jit = jax.jit(jax.vmap(_frontier_impl))
+
+
+def _apply_one(state, updates, keep_conflicts_published):
+    return _apply_impl(state, updates, count_round=True,
+                       keep_conflicts_published=keep_conflicts_published)
+
+
+def _batched(fn):
+    """vmap over (state, updates) with the static policy flag closed over."""
+    def call(state, updates, keep_conflicts_published):
+        return jax.vmap(functools.partial(
+            fn, keep_conflicts_published=keep_conflicts_published))(
+                state, updates)
+    return jax.jit(call, static_argnames=("keep_conflicts_published",))
+
+
 _session_apply_jit = jax.jit(
-    functools.partial(_apply_impl, count_round=True))
-_session_apply_batch_jit = jax.jit(
-    jax.vmap(functools.partial(_apply_impl, count_round=True)))
+    _apply_one, static_argnames=("keep_conflicts_published",))
+# exact batched variants: under vmap the screening cond lowers to a select
+# that executes BOTH branches, including the O(P^2) sequential replay — used
+# only as the fallback when a speculative fast fold's screen actually fired
+_session_apply_batch_jit = _batched(_apply_one)
+_session_apply_fast_batch_jit = _batched(functools.partial(
+    _apply_fast_flagged_impl, count_round=True))
 _session_deduce_jit = jax.jit(_deduce_impl)
 _session_deduce_batch_jit = jax.jit(jax.vmap(_deduce_impl))
-_session_fold_jit = jax.jit(_fold_impl)
-_session_fold_batch_jit = jax.jit(jax.vmap(_fold_impl))
+_session_fold_jit = jax.jit(
+    _fold_impl, static_argnames=("keep_conflicts_published",))
+_session_fold_batch_jit = _batched(_fold_impl)
+_session_fold_fast_batch_jit = _batched(_fold_fast_flagged_impl)
 _session_mark_published_jit = jax.jit(_mark_published_impl)
 _session_mark_published_batch_jit = jax.jit(jax.vmap(_mark_published_impl))
+_session_trust_graph_jit = jax.jit(_trust_graph_impl)
+_session_trust_graph_batch_jit = jax.jit(jax.vmap(_trust_graph_impl))
 
 
 def session_frontier(state: SessionState) -> jax.Array:
@@ -565,15 +777,31 @@ def session_frontier_batch(state: SessionState) -> jax.Array:
     return _session_frontier_batch_jit(state)
 
 
-def session_apply_answers(state: SessionState, updates) -> SessionState:
-    """Fold crowd answers (UNKNOWN = nothing landed) into the state."""
+def session_apply_answers(state: SessionState, updates,
+                          keep_conflicts_published: bool = False
+                          ) -> Tuple[SessionState, jax.Array]:
+    """Fold crowd answers (UNKNOWN = nothing landed) into the state.
+    Returns ``(state, conflict_mask)`` — rejected contradictory answers are
+    flagged in the mask and counted in ``state.conflicts`` (DESIGN.md §9)."""
     engine_dispatches.add()
-    return _session_apply_jit(state, updates)
+    return _session_apply_jit(state, updates, keep_conflicts_published)
 
 
-def session_apply_answers_batch(state: SessionState, updates) -> SessionState:
+def session_apply_answers_batch(state: SessionState, updates,
+                                keep_conflicts_published: bool = False
+                                ) -> Tuple[SessionState, jax.Array]:
+    """Speculative-fast batched apply: one dispatch takes the parallel path
+    for all B sessions and returns per-session screen flags; only when some
+    session's stream actually conflicted does a second dispatch re-run the
+    exact (sequential-replay) fold — so conflict-free serving rounds cost
+    the same as the pre-§9 path."""
     engine_dispatches.add()
-    return _session_apply_batch_jit(state, updates)
+    new_state, cmask, flags = _session_apply_fast_batch_jit(
+        state, updates, keep_conflicts_published)
+    if not bool(jnp.any(flags)):
+        return new_state, cmask
+    engine_dispatches.add()
+    return _session_apply_batch_jit(state, updates, keep_conflicts_published)
 
 
 def session_deduce(state: SessionState) -> SessionState:
@@ -587,15 +815,28 @@ def session_deduce_batch(state: SessionState) -> SessionState:
     return _session_deduce_batch_jit(state)
 
 
-def session_fold_answers(state: SessionState, updates) -> SessionState:
-    """apply_answers + deduce fused into a single device dispatch."""
+def session_fold_answers(state: SessionState, updates,
+                         keep_conflicts_published: bool = False
+                         ) -> Tuple[SessionState, jax.Array]:
+    """apply_answers + deduce fused into a single device dispatch.
+    Returns ``(state, conflict_mask)``."""
     engine_dispatches.add()
-    return _session_fold_jit(state, updates)
+    return _session_fold_jit(state, updates, keep_conflicts_published)
 
 
-def session_fold_answers_batch(state: SessionState, updates) -> SessionState:
+def session_fold_answers_batch(state: SessionState, updates,
+                               keep_conflicts_published: bool = False
+                               ) -> Tuple[SessionState, jax.Array]:
+    """Speculative-fast batched fold (see ``session_apply_answers_batch``):
+    the conflict-free common case is one parallel dispatch; the exact fold
+    re-runs only when a screen flag fired."""
     engine_dispatches.add()
-    return _session_fold_batch_jit(state, updates)
+    new_state, cmask, flags = _session_fold_fast_batch_jit(
+        state, updates, keep_conflicts_published)
+    if not bool(jnp.any(flags)):
+        return new_state, cmask
+    engine_dispatches.add()
+    return _session_fold_batch_jit(state, updates, keep_conflicts_published)
 
 
 def session_mark_published(state: SessionState, mask) -> SessionState:
@@ -607,6 +848,18 @@ def session_mark_published(state: SessionState, mask) -> SessionState:
 def session_mark_published_batch(state: SessionState, mask) -> SessionState:
     engine_dispatches.add()
     return _session_mark_published_batch_jit(state, mask)
+
+
+def session_trust_graph(state: SessionState, mask) -> SessionState:
+    """Resolve requery-exhausted pairs: un-publish ``mask`` and deduce their
+    labels from the graph (one dispatch, DESIGN.md §9)."""
+    engine_dispatches.add()
+    return _session_trust_graph_jit(state, mask)
+
+
+def session_trust_graph_batch(state: SessionState, mask) -> SessionState:
+    engine_dispatches.add()
+    return _session_trust_graph_batch_jit(state, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -710,9 +963,12 @@ def label_parallel_jax_batch(
     The whole batch lives in one stacked :class:`SessionState`: sessions are
     packed once up front, every round is one frontier dispatch + one fused
     apply+deduce dispatch over the persistent state (DESIGN.md §8).
+    Contradictory crowd answers are dropped at the fold and counted
+    (DESIGN.md §9); the rejected pair gets its deduced label instead.
 
-    Returns ``[(labels, crowdsourced_mask, round_sizes), ...]`` per session,
-    identical to running ``label_parallel_jax`` on each session alone.
+    Returns ``[(labels, crowdsourced_mask, round_sizes, n_conflicts), ...]``
+    per session, identical to running ``label_parallel_jax`` on each
+    session alone.
     """
     B = len(sessions)
     U, V, labels0, valid, n_cap = pack_sessions(
@@ -738,10 +994,12 @@ def label_parallel_jax_batch(
             crowdsourced[b, idx] = True
             updates[b, idx] = crowd_fn(b, idx)
         engine_dispatches.add()  # updates upload
-        state = session_fold_answers_batch(state, jnp.asarray(updates))
+        state, _ = session_fold_answers_batch(state, jnp.asarray(updates))
         labels_host = np.asarray(state.labels)
+    conflicts = np.asarray(state.conflicts)
     return [
-        (labels_host[b, valid[b]], crowdsourced[b, valid[b]], rounds[b])
+        (labels_host[b, valid[b]], crowdsourced[b, valid[b]], rounds[b],
+         int(conflicts[b, valid[b]].sum()))
         for b in range(B)
     ]
 
@@ -756,11 +1014,14 @@ def label_parallel_jax(
     v: np.ndarray,
     n_objects: int,
     crowd_fn,
-) -> Tuple[np.ndarray, np.ndarray, list]:
+) -> Tuple[np.ndarray, np.ndarray, list, int]:
     """Iterate: frontier -> crowd -> deduce, entirely with the array engine.
 
     ``crowd_fn(idx_array) -> int32 array of {NEG, POS}`` labels the frontier.
-    Returns (labels, crowdsourced_mask, per-round frontier sizes).
+    Crowd answers contradicting the accumulated evidence are dropped at the
+    conflict-aware fold (the pair gets its deduced label) and counted.
+    Returns (labels, crowdsourced_mask, per-round frontier sizes,
+    n_conflicts).
     """
     P = len(u)
     uj = jnp.asarray(u, jnp.int32)
@@ -769,24 +1030,26 @@ def label_parallel_jax(
     crowdsourced = np.zeros(P, dtype=bool)
     published = jnp.zeros((P,), dtype=bool)
     rounds = []
+    n_conflicts = 0
     while bool(jnp.any(labels == UNKNOWN)):
         frontier = boruvka_frontier(uj, vj, labels, published, n_objects)
         idx = np.nonzero(np.asarray(frontier))[0]
         if len(idx) == 0:
             # everything left is deducible
-            roots = connected_components(uj, vj, labels == POS, n_objects)
-            sorted_neg = neg_keys(roots, uj, vj, labels == NEG, n_objects)
-            ded = deduce_batch(roots, sorted_neg, uj, vj, n_objects)
-            labels = jnp.where(labels == UNKNOWN, ded, labels)
+            state = session_from_labels(uj, vj, labels, published, n_objects)
+            state = session_deduce(state)
+            labels = state.labels
             assert not bool(jnp.any(labels == UNKNOWN)), "engine stuck"
             break
         rounds.append(len(idx))
         crowdsourced[idx] = True
         got = crowd_fn(idx)
-        labels = labels.at[jnp.asarray(idx)].set(jnp.asarray(got, jnp.int32))
-        # deduction sweep
-        roots = connected_components(uj, vj, labels == POS, n_objects)
-        sorted_neg = neg_keys(roots, uj, vj, labels == NEG, n_objects)
-        ded = deduce_batch(roots, sorted_neg, uj, vj, n_objects)
-        labels = jnp.where(labels == UNKNOWN, ded, labels)
-    return np.asarray(labels), crowdsourced, rounds
+        updates = np.full(P, UNKNOWN, np.int32)
+        updates[idx] = np.asarray(got, np.int32)
+        # from-scratch rebuild + conflict-aware fold (apply + deduce sweep)
+        state = session_from_labels(uj, vj, labels, published, n_objects)
+        engine_dispatches.add()  # updates upload
+        state, cmask = session_fold_answers(state, jnp.asarray(updates))
+        labels = state.labels
+        n_conflicts += int(np.asarray(cmask).sum())
+    return np.asarray(labels), crowdsourced, rounds, n_conflicts

@@ -35,6 +35,7 @@ class JoinResult:
     quality: Optional[Quality]
     wall_seconds: float
     clusters: Optional[dict] = None
+    n_conflicts: int = 0           # contradictory crowd answers dropped
 
 
 def crowdsourced_join(
@@ -66,7 +67,7 @@ def crowdsourced_join(
                 dtype=np.int32,
             )
 
-        labels_j, crowdsourced_j, rounds = label_parallel_jax(
+        labels_j, crowdsourced_j, rounds, n_conf = label_parallel_jax(
             ordered.u, ordered.v, ordered.n_objects, crowd_fn
         )
         # map back to original indexing
@@ -74,7 +75,8 @@ def crowdsourced_join(
         crowdsourced = np.zeros(len(candidates), dtype=bool)
         labels[perm] = labels_j == POS
         crowdsourced[perm] = crowdsourced_j
-        res = LabelingResult(labels, crowdsourced, len(rounds), rounds)
+        res = LabelingResult(labels, crowdsourced, len(rounds), rounds,
+                             n_conflicts=n_conf)
     else:
         raise ValueError(labeler)
 
@@ -92,6 +94,7 @@ def crowdsourced_join(
         g.add_label(int(candidates.u[i]), int(candidates.v[i]), MATCH)
 
     return JoinResult(
+        n_conflicts=res.n_conflicts,
         labels=res.labels,
         n_crowdsourced=res.n_crowdsourced,
         n_deduced=res.n_deduced,

@@ -46,7 +46,11 @@ def label_sequential(pairs: PairSet, order: np.ndarray, crowd: Crowd) -> Labelin
         if d is None:
             lab = crowd.ask(pairs, i)
             crowdsourced[i] = True
-            g.add_label(o, o2, lab)
+            if not g.add_label(o, o2, lab):
+                # contradictory noisy answer: dropped and counted by the
+                # graph; the pair takes its deduced label instead (the
+                # "drop" conflict policy — DESIGN.md §9)
+                lab = g.deduce(o, o2)
         else:
             lab = d
         labels[i] = lab == MATCH

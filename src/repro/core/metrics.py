@@ -29,6 +29,22 @@ class Quality:
                 f"F={self.f_measure:.2%}")
 
 
+def transitively_consistent(candidate: PairSet,
+                            predicted_match: np.ndarray) -> bool:
+    """True iff the predicted labels admit a consistent clustering: no pair
+    labeled non-matching has both endpoints inside one matching-closure
+    cluster.  This is the §9 acceptance check for noisy serving runs — a
+    conflict-corrupted result violates it, a conflict-screened one cannot."""
+    from .cluster_graph import ClusterGraph, MATCH
+
+    g = ClusterGraph(candidate.n_objects)
+    for i in np.nonzero(predicted_match)[0]:
+        g.add_label(int(candidate.u[i]), int(candidate.v[i]), MATCH)
+    return all(
+        not g.connected(int(candidate.u[i]), int(candidate.v[i]))
+        for i in np.nonzero(~np.asarray(predicted_match, bool))[0])
+
+
 def quality(
     candidate: PairSet,
     predicted_match: np.ndarray,   # (P,) bool over candidate pairs

@@ -102,12 +102,20 @@ def label_parallel(pairs: PairSet, order: np.ndarray, crowd: Crowd) -> LabelingR
     known: Dict[int, str] = {}
     crowdsourced = np.zeros(n, dtype=bool)
     batch_sizes: List[int] = []
+    # persistent evidence graph: noisy answers contradicting it are dropped
+    # and counted, and the pair takes its deduced label instead, so ``known``
+    # stays consistent for the selection/deduction scans (DESIGN.md §9)
+    g = ClusterGraph(pairs.n_objects)
     while len(known) < n:
         batch = parallel_crowdsourced_pairs(pairs, order, known)
         assert batch, "no progress — inconsistent state"
         for i in batch:
-            known[i] = crowd.ask(pairs, i)
+            o, o2 = int(pairs.u[i]), int(pairs.v[i])
+            lab = crowd.ask(pairs, i)
             crowdsourced[i] = True
+            if not g.add_label(o, o2, lab):
+                lab = g.deduce(o, o2)
+            known[i] = lab
         batch_sizes.append(len(batch))
         deduction_sweep(pairs, order, known)
     labels = np.zeros(n, dtype=bool)
@@ -118,6 +126,7 @@ def label_parallel(pairs: PairSet, order: np.ndarray, crowd: Crowd) -> LabelingR
         crowdsourced=crowdsourced,
         n_iterations=len(batch_sizes),
         batch_sizes=batch_sizes,
+        n_conflicts=g.n_conflicts,
     )
 
 
@@ -149,6 +158,9 @@ def simulate_stream(
     crowdsourced = np.zeros(n, dtype=bool)
     published: Set[int] = set()
     batch_sizes: List[int] = []
+    # persistent evidence graph for noisy streams (DESIGN.md §9): a returned
+    # label contradicting it is dropped and replaced by the deduced label
+    g = ClusterGraph(pairs.n_objects)
 
     def publish_initial():
         batch = parallel_crowdsourced_pairs(pairs, order, known, exclude=published)
@@ -178,6 +190,8 @@ def simulate_stream(
         else:
             i = plist[int(rng.integers(len(plist)))]
         lab = crowd.ask(pairs, i)
+        if not g.add_label(int(pairs.u[i]), int(pairs.v[i]), lab):
+            lab = g.deduce(int(pairs.u[i]), int(pairs.v[i]))
         known[i] = lab
         crowdsourced[i] = True
         published.discard(i)
@@ -199,6 +213,7 @@ def simulate_stream(
         crowdsourced=crowdsourced,
         n_iterations=len(batch_sizes),
         batch_sizes=batch_sizes,
+        n_conflicts=g.n_conflicts,
     )
     return StreamTrace(trace_l, trace_a, res)
 
@@ -214,6 +229,7 @@ class WallClock:
     cost_cents: float
     labels: Dict[int, str]
     hits: List[List[int]] = dataclasses.field(default_factory=list)
+    n_conflicts: int = 0
 
 
 def simulate_wallclock_parallel_id(
@@ -232,6 +248,7 @@ def simulate_wallclock_parallel_id(
     rng = np.random.default_rng(seed)
     known: Dict[int, str] = {}
     published: Set[int] = set()
+    g = ClusterGraph(pairs.n_objects)   # persistent evidence graph (§9)
     hits: List[List[int]] = []          # hit id -> pair indices
     hit_remaining: Dict[int, int] = {}  # hit id -> assignments outstanding
     pending_pairs: List[int] = []       # selected, not yet batched into a HIT
@@ -276,8 +293,12 @@ def simulate_wallclock_parallel_id(
         hit_remaining[hid] -= 1
         if hit_remaining[hid] == 0:
             # HIT complete: all its pairs get their majority-vote labels
+            # (contradictory noisy labels drop to the deduced value, §9)
             for i in hits[hid]:
-                known[i] = crowd.ask(pairs, i)
+                lab = crowd.ask(pairs, i)
+                if not g.add_label(int(pairs.u[i]), int(pairs.v[i]), lab):
+                    lab = g.deduce(int(pairs.u[i]), int(pairs.v[i]))
+                known[i] = lab
                 published.discard(i)
             deduction_sweep(pairs, order, known, skip=published)
             select_new()
@@ -295,6 +316,7 @@ def simulate_wallclock_parallel_id(
         cost_cents=len(hits) * cost.assignments_per_hit * cost.cents_per_assignment,
         labels=known,
         hits=hits,
+        n_conflicts=g.n_conflicts,
     )
 
 

@@ -26,6 +26,18 @@ Two serving disciplines over the same state machinery:
   first.  With a ``LatencyModel`` attached, ``sim_minutes`` on the results
   reports the simulated platform wall clock.
 
+Noisy crowds make answers *conflict* with transitivity (DESIGN.md §9).
+Every fold screens answers against the live state; a contradictory answer
+is rejected, counted (``JoinSessionResult.n_conflicts``), and resolved per
+``conflict_policy``:
+
+* ``"drop"`` (default, the sequential oracle's semantics): the rejected
+  answer is discarded and the pair takes its deduced label.
+* ``"requery"``: the rejected pair stays in flight and goes back through
+  the gateway with an escalated assignment count (3-way → 5-way); if the
+  escalated answer still contradicts the graph, the pair is *exhausted*
+  and the graph's deduced label wins (trust-the-graph).
+
 Shapes are bucketed to powers of two (pair and object capacities) at lane
 open, so lane churn reuses a handful of jit cache entries instead of
 recompiling per request mix.
@@ -51,7 +63,9 @@ from repro.core.jax_graph import (
     UNKNOWN, POS, SessionState, engine_dispatches, make_session_state,
     pair_keys_fit, session_apply_answers, session_deduce,
     session_fold_answers, session_fold_answers_batch, session_frontier,
-    session_frontier_batch, session_mark_published)
+    session_frontier_batch, session_mark_published,
+    session_mark_published_batch, session_trust_graph,
+    session_trust_graph_batch)
 from repro.core.metrics import Quality, quality
 from repro.core.pairs import PairSet
 from repro.core.sorting import get_order
@@ -82,6 +96,9 @@ class JoinSessionResult:
     # under the round barrier; under async ID/NF it counts poll events that
     # landed answers, i.e. how often the lane re-engaged the engine
     fold_rounds: int = 0
+    # error-tolerance accounting (DESIGN.md §9)
+    n_conflicts: int = 0           # contradictory answers rejected at the fold
+    n_requeried: int = 0           # rejected pairs re-posted with escalation
 
     @property
     def n_crowdsourced(self) -> int:
@@ -104,6 +121,7 @@ class _Lane:
     round_sizes: List[int]
     t0: float
     in_flight: int = 0             # pairs posted to the gateway, unanswered
+    n_requeried: int = 0           # escalated re-posts for rejected answers
 
     @property
     def done(self) -> bool:
@@ -139,18 +157,31 @@ class JoinService:
     ``latency`` attaches a simulated asynchronous crowd platform (see
     :class:`CrowdGateway`); ``async_mode=True`` switches from round-barrier
     rounds to the event-driven ID/NF discipline; ``nf`` steers the simulated
-    workers to probable-non-matching pairs first (only meaningful with a
-    latency model).
+    workers to probable-non-matching pairs first (requires a latency model —
+    immediate-mode steering would be a silent no-op).  ``conflict_policy``
+    picks how rejected contradictory answers resolve (DESIGN.md §9):
+    ``"drop"`` (oracle semantics — deduced label wins immediately) or
+    ``"requery"`` (escalate through the gateway, then trust the graph).
     """
 
     def __init__(self, lanes: int = 4, cost: Optional[CostModel] = None,
                  latency: Optional[LatencyModel] = None,
-                 async_mode: bool = False, nf: bool = False):
+                 async_mode: bool = False, nf: bool = False,
+                 conflict_policy: str = "drop"):
+        if conflict_policy not in ("drop", "requery"):
+            raise ValueError(
+                f"conflict_policy must be 'drop' or 'requery', "
+                f"got {conflict_policy!r}")
+        if nf and latency is None:
+            raise ValueError(
+                "nf=True requires a LatencyModel: non-matching-first steers "
+                "worker pickup order, which does not exist in immediate mode")
         self.lanes = lanes
         self.cost = cost or CostModel()
         self.latency = latency
         self.async_mode = async_mode
         self.nf = nf
+        self.conflict_policy = conflict_policy
         self.queue: Deque[JoinRequest] = collections.deque()
         self.results: Dict[int, JoinSessionResult] = {}
         self._next_rid = 0
@@ -165,9 +196,16 @@ class JoinService:
     def submit(self, pairs: PairSet, crowd: Optional[Crowd] = None,
                order: str = "expected", rid: Optional[int] = None,
                total_true_matches: Optional[int] = None) -> int:
-        """Enqueue a join over pre-scored candidate pairs; returns the rid."""
+        """Enqueue a join over pre-scored candidate pairs; returns the rid.
+        An explicit ``rid`` colliding with a queued or served request is
+        rejected — a silent overwrite would drop the earlier result."""
         if rid is None:
             rid = self._next_rid
+        elif rid in self.results or any(r.rid == rid for r in self.queue):
+            raise ValueError(
+                f"duplicate join request rid {rid}: already "
+                f"{'served' if rid in self.results else 'queued'} — pick a "
+                "fresh rid (or omit it for an auto-assigned one)")
         self._next_rid = max(self._next_rid, rid) + 1
         self.queue.append(JoinRequest(rid, pairs, crowd or PerfectCrowd(),
                                       order, total_true_matches))
@@ -178,7 +216,8 @@ class JoinService:
                           crowd: Optional[Crowd] = None,
                           truth_fn=None, order: str = "expected",
                           capacity: Optional[int] = None,
-                          impl: str = "auto") -> int:
+                          impl: str = "auto",
+                          total_true_matches: Optional[int] = None) -> int:
         """Machine phase + enqueue: score (emb_a x emb_b) on the mesh with
         the sharded kernel driver, keep pairs above ``threshold`` (cosine,
         mapped to [0, 1] likelihood), and queue the session.
@@ -188,6 +227,11 @@ class JoinService:
         per-device candidate buffers (default: lossless).  Join keys are
         offset so the two sides share one object universe: a-row i -> i,
         b-row j -> N + j.
+
+        ``total_true_matches`` is the dataset-wide true-match count for
+        recall (the paper's §6.4 definition): without it, recall is computed
+        against above-threshold candidates only, so a true match the machine
+        phase filtered out silently inflates quality.
         """
         from repro.kernels.pair_scores.sharded import sharded_candidates
 
@@ -209,7 +253,8 @@ class JoinService:
             truth=truth,
             n_objects=n_a + int(emb_b.shape[0]),
         )
-        return self.submit(pairs, crowd, order)
+        return self.submit(pairs, crowd, order,
+                           total_true_matches=total_true_matches)
 
     # -- lane lifecycle ------------------------------------------------------
     def _open_lane(self, req: JoinRequest) -> _Lane:
@@ -262,6 +307,8 @@ class JoinService:
             wall_seconds=time.perf_counter() - lane.t0,
             sim_minutes=sim_minutes,
             fold_rounds=int(np.asarray(lane.state.rounds)),
+            n_conflicts=int(np.asarray(lane.state.conflicts)[:lane.p].sum()),
+            n_requeried=lane.n_requeried,
         )
 
     def _retire_done(self, active: List[_Lane],
@@ -301,8 +348,12 @@ class JoinService:
         """One engine round over the occupied lanes: batched frontier over
         bucket-grouped stacked states, one gateway post per lane, a full
         gateway drain (the round barrier), one fused apply+deduce dispatch.
+        Under ``conflict_policy="requery"`` the round keeps draining and
+        folding until every rejected answer has been escalated to resolution
+        (re-answered clean, or exhausted and trusted to the graph).
         Returns True iff any lane made progress (crowdsourced or deduced at
         least one pair)."""
+        requery = self.conflict_policy == "requery"
         groups: Dict[Tuple[int, int], List[_Lane]] = {}
         for lane in active:
             groups.setdefault(lane.bucket, []).append(lane)
@@ -310,7 +361,13 @@ class JoinService:
         for key, lanes in groups.items():
             stacked = self._group_stack(key, lanes)
             frontier = np.asarray(session_frontier_batch(stacked))
-            staged.append((key, lanes, stacked, frontier))
+            if requery and frontier.any():
+                # published bits gate the fused deduce off still-contested
+                # pairs, so a rejected answer can wait for its escalation
+                engine_dispatches.add()  # frontier-mask upload
+                stacked = session_mark_published_batch(
+                    stacked, jnp.asarray(frontier))
+            staged.append([key, lanes, stacked, frontier])
         # post every lane's frontier, then drain: the barrier spans all lanes
         for _, lanes, _, frontier in staged:
             for b, lane in enumerate(lanes):
@@ -320,18 +377,51 @@ class JoinService:
                 lane.round_sizes.append(len(idx))
                 lane.crowdsourced[idx] = True
                 gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd)
-        answers: Dict[int, List] = {}
-        for ans in gateway.drain():
-            answers.setdefault(ans.rid, []).append(ans)
+        # fold/escalate until no group has a conflict awaiting an answer
+        pending = True
+        while pending:
+            pending = False
+            answers: Dict[int, List] = {}
+            for ans in gateway.drain():
+                answers.setdefault(ans.rid, []).append(ans)
+            for stage in staged:
+                key, lanes, stacked, frontier = stage
+                B, p_cap = frontier.shape
+                updates = np.full((B, p_cap), UNKNOWN, np.int32)
+                landed = False
+                for b, lane in enumerate(lanes):
+                    for ans in answers.get(lane.req.rid, ()):
+                        updates[b, ans.index] = ans.label
+                        landed = True
+                if not landed:
+                    continue  # nothing for this group this pass
+                engine_dispatches.add()  # updates upload
+                stacked, cmask = session_fold_answers_batch(
+                    stacked, jnp.asarray(updates),
+                    keep_conflicts_published=requery)
+                if requery:
+                    cmask = np.asarray(cmask)
+                    exhausted_mask = np.zeros(cmask.shape, bool)
+                    trust = False
+                    for b, lane in enumerate(lanes):
+                        cidx = np.nonzero(cmask[b, :lane.p])[0]
+                        if len(cidx) == 0:
+                            continue
+                        ticket, exhausted = gateway.requery(
+                            lane.req.rid, lane.ordered, cidx, lane.req.crowd)
+                        lane.n_requeried += len(ticket.indices)
+                        pending |= bool(ticket.indices)
+                        if exhausted:
+                            exhausted_mask[b, exhausted] = True
+                            trust = True
+                    if trust:
+                        # escalation ladder exhausted: the graph outvotes
+                        # the crowd — un-publish + deduce in one dispatch
+                        stacked = session_trust_graph_batch(
+                            stacked, jnp.asarray(exhausted_mask))
+                stage[2] = stacked
         progress = False
-        for key, lanes, stacked, frontier in staged:
-            B, p_cap = frontier.shape
-            updates = np.full((B, p_cap), UNKNOWN, np.int32)
-            for b, lane in enumerate(lanes):
-                for ans in answers.get(lane.req.rid, ()):
-                    updates[b, ans.index] = ans.label
-            engine_dispatches.add()  # updates upload
-            stacked = session_fold_answers_batch(stacked, jnp.asarray(updates))
+        for key, lanes, stacked, _ in staged:
             self._stacks[key] = (tuple(lanes), stacked)
             labels = np.asarray(stacked.labels)
             for b, lane in enumerate(lanes):
@@ -363,6 +453,24 @@ class JoinService:
         whose answers are still in flight) and refresh the host mirror."""
         lane.state = session_deduce(lane.state)
         lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
+
+    def _handle_conflicts(self, lane: _Lane, cidx: np.ndarray,
+                          gateway: CrowdGateway) -> None:
+        """Requery-policy escalation for pairs whose answers were rejected:
+        re-post through the gateway (they stay published, so deduction holds
+        off), and let the graph label the exhausted ones (DESIGN.md §9).
+        Under the drop policy the fold already settled them — nothing to do."""
+        if self.conflict_policy != "requery":
+            return
+        ticket, exhausted = gateway.requery(
+            lane.req.rid, lane.ordered, cidx, lane.req.crowd)
+        lane.n_requeried += len(ticket.indices)
+        lane.in_flight += len(ticket.indices)
+        if exhausted:
+            mask = np.zeros(lane.state.u.shape[0], bool)
+            mask[exhausted] = True
+            engine_dispatches.add()  # exhausted-mask upload
+            lane.state = session_trust_graph(lane.state, jnp.asarray(mask))
 
     def _run_async(self) -> Dict[int, JoinSessionResult]:
         """Event-driven serving (§5.2 lifted into the service): lanes fold
@@ -405,6 +513,7 @@ class JoinService:
             for ans in answers:
                 by_rid.setdefault(ans.rid, []).append(ans)
             lanes_by_rid = {l.req.rid: l for l in active}
+            keep_pub = self.conflict_policy == "requery"
             for rid, got in by_rid.items():
                 lane = lanes_by_rid.get(rid)
                 if lane is None:
@@ -416,19 +525,30 @@ class JoinService:
                 lane.in_flight -= len(got)
                 engine_dispatches.add()  # updates upload
                 any_neg = any(ans.label != POS for ans in got)
-                if any_neg or lane.in_flight == 0:
+                fold_now = any_neg or lane.in_flight == 0
+                if fold_now:
                     # §5.2: a returned MATCH agrees with the optimistic
                     # assumption — selection can only change on NEG (or when
                     # the lane drains); fold + deduce + re-select at once.
-                    lane.state = session_fold_answers(
-                        lane.state, jnp.asarray(updates))
-                    lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
-                    if not lane.done:
-                        self._publish(lane, gateway)
+                    lane.state, cmask = session_fold_answers(
+                        lane.state, jnp.asarray(updates),
+                        keep_conflicts_published=keep_pub)
                 else:
-                    lane.state = session_apply_answers(
-                        lane.state, jnp.asarray(updates))
-                    lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
+                    lane.state, cmask = session_apply_answers(
+                        lane.state, jnp.asarray(updates),
+                        keep_conflicts_published=keep_pub)
+                cidx = np.nonzero(np.asarray(cmask)[:lane.p])[0]
+                if len(cidx):
+                    self._handle_conflicts(lane, cidx, gateway)
+                    if not fold_now:
+                        # a rejected answer is a NEG-grade event: the
+                        # optimistic assumption broke even though every
+                        # returned label read MATCH — deduce + re-select
+                        self._sweep_lane(lane)
+                        fold_now = True
+                lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
+                if fold_now and not lane.done:
+                    self._publish(lane, gateway)
             active = self._retire_done(active, gateway)
         return dict(self.results)
 

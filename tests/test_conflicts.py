@@ -1,0 +1,375 @@
+"""Conflict-aware folding + requery subsystem (DESIGN.md §9).
+
+The engine must reproduce ``ClusterGraph``'s answer-at-a-time conflict
+semantics bit-for-bit on arbitrary (noisy, contradictory) answer streams —
+labels, conflict counts, and the roots/neg-keys invariants — in both the
+unbatched and the batched fold; the gateway must escalate requeried pairs
+and expose measured worker disagreement; and noisy end-to-end serving runs
+must finish with transitively-consistent labels under both conflict
+policies and both serving disciplines.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (ClusterGraph, MATCH, NEG, NON_MATCH, POS, UNKNOWN,
+                        CrowdGateway, LatencyModel, NoisyCrowd, PerfectCrowd,
+                        crowdsourced_join, make_session_state,
+                        make_session_state_batch, pack_sessions,
+                        session_fold_answers, session_fold_answers_batch,
+                        session_from_labels, transitively_consistent)
+from repro.core.pairs import PairSet
+
+
+# ---------------------------------------------------------------------------
+# Stream-parity harness: SessionState fold vs ClusterGraph, answer for answer
+# ---------------------------------------------------------------------------
+def _random_world(rng):
+    n = int(rng.integers(4, 16))
+    ent = rng.integers(0, 4, n)
+    all_e = list(itertools.combinations(range(n), 2))
+    m = int(rng.integers(3, min(24, len(all_e)) + 1))
+    sel = rng.permutation(len(all_e))[:m]
+    u = np.array([all_e[i][0] for i in sel], np.int32)
+    v = np.array([all_e[i][1] for i in sel], np.int32)
+    truth = np.where(ent[u] == ent[v], POS, NEG).astype(np.int32)
+    return n, u, v, truth
+
+
+def _noisy_chunks(rng, order, truth, labels_ref, flip):
+    """Next chunk of answers for still-unlabeled pairs (the only pairs any
+    driver ever posts), each flipped against truth with prob ``flip``.
+    Deduction clears everything deducible between folds, so contradictions
+    only arise *inside* a batch — half the chunks take every available pair
+    at once to maximize intra-batch interaction."""
+    avail = [int(i) for i in order if labels_ref[i] == UNKNOWN]
+    if not avail:
+        return None
+    step = len(avail) if rng.random() < 0.5 else int(rng.integers(1, 5))
+    # answers inside one fold land in pair-index order (= labeling order)
+    idx = sorted(avail[:step])
+    return [(i, int(truth[i]) if rng.random() >= flip else 1 - int(truth[i]))
+            for i in idx]
+
+
+def _reference_apply(g, u, v, labels_ref, chunk):
+    """The oracle side: ClusterGraph.add_label per answer (conflicts dropped
+    and counted by the graph), then a full deduction sweep."""
+    for i, code in chunk:
+        lab = MATCH if code == POS else NON_MATCH
+        if g.add_label(int(u[i]), int(v[i]), lab):
+            labels_ref[i] = code
+    for i in range(len(u)):
+        if labels_ref[i] == UNKNOWN:
+            d = g.deduce(int(u[i]), int(v[i]))
+            if d is not None:
+                labels_ref[i] = POS if d == MATCH else NEG
+
+
+def _check_stream_parity(seed: int, flip: float = 0.35) -> int:
+    """Fold one noisy stream through the engine and the oracle in lockstep;
+    assert label, conflict-count, and state-invariant parity after every
+    fold.  Returns the total conflict count (for coverage assertions)."""
+    rng = np.random.default_rng(seed)
+    n, u, v, truth = _random_world(rng)
+    m = len(u)
+    state = make_session_state(u, v, n)
+    g = ClusterGraph(n)
+    labels_ref = np.full(m, UNKNOWN, np.int32)
+    order = rng.permutation(m)
+    while True:
+        chunk = _noisy_chunks(rng, order, truth, labels_ref, flip)
+        if chunk is None:
+            break
+        upd = np.full(m, UNKNOWN, np.int32)
+        for i, code in chunk:
+            upd[i] = code
+        state, cmask = session_fold_answers(state, jnp.asarray(upd))
+        _reference_apply(g, u, v, labels_ref, chunk)
+        np.testing.assert_array_equal(np.asarray(state.labels), labels_ref)
+        assert int(np.asarray(state.conflicts).sum()) == g.n_conflicts
+        # §8 invariant survives the noise: state == rebuild from labels
+        ref = session_from_labels(u, v, labels_ref, np.zeros(m, bool), n)
+        np.testing.assert_array_equal(np.asarray(state.roots),
+                                      np.asarray(ref.roots))
+        np.testing.assert_array_equal(np.asarray(state.neg_keys),
+                                      np.asarray(ref.neg_keys))
+    assert not (labels_ref == UNKNOWN).any()
+    return g.n_conflicts
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fold_stream_matches_cluster_graph(seed):
+    _check_stream_parity(seed)
+
+
+def test_fold_stream_conflicts_actually_exercised():
+    """The parity seeds must include real contradictions — otherwise the
+    conflict path is vacuously 'identical'."""
+    total = sum(_check_stream_parity(seed) for seed in range(8))
+    assert total > 0, "no conflicts across all parity seeds"
+
+
+@given(st.integers(0, 10**6))
+def test_fold_stream_matches_cluster_graph_property(seed):
+    _check_stream_parity(seed)
+
+
+def test_fold_stream_matches_cluster_graph_batched():
+    """Same lockstep parity through the vmapped batched fold: B sessions
+    with independent noisy streams advance in stacked folds."""
+    B = 3
+    rngs = [np.random.default_rng(100 + b) for b in range(B)]
+    worlds = [_random_world(r) for r in rngs]
+    sessions = [(u, v, n) for n, u, v, _ in worlds]
+    U, V, labels0, valid, n_cap = pack_sessions(sessions)
+    state = make_session_state_batch(U, V, labels0, n_cap)
+    graphs = [ClusterGraph(n) for n, _, _, _ in worlds]
+    refs = [np.full(len(u), UNKNOWN, np.int32) for _, u, _, _ in worlds]
+    orders = [r.permutation(len(w[1])) for r, w in zip(rngs, worlds)]
+    done = [False] * B
+    while not all(done):
+        updates = np.full(labels0.shape, UNKNOWN, np.int32)
+        chunks = [None] * B
+        for b in range(B):
+            if done[b]:
+                continue
+            n, u, v, truth = worlds[b]
+            chunk = _noisy_chunks(rngs[b], orders[b], truth, refs[b], 0.35)
+            if chunk is None:
+                done[b] = True
+                continue
+            chunks[b] = chunk
+            for i, code in chunk:
+                updates[b, i] = code
+        if all(c is None for c in chunks):
+            break
+        state, cmask = session_fold_answers_batch(state,
+                                                  jnp.asarray(updates))
+        labels = np.asarray(state.labels)
+        conflicts = np.asarray(state.conflicts)
+        for b in range(B):
+            if chunks[b] is None:
+                continue
+            n, u, v, truth = worlds[b]
+            _reference_apply(graphs[b], u, v, refs[b], chunks[b])
+            np.testing.assert_array_equal(labels[b, valid[b]], refs[b])
+            assert int(conflicts[b, valid[b]].sum()) == graphs[b].n_conflicts
+
+
+# ---------------------------------------------------------------------------
+# NoisyCrowd: odd-assignment validation + disagreement accounting
+# ---------------------------------------------------------------------------
+def test_noisy_crowd_rejects_even_assignments():
+    """A tied even vote silently resolves to the WRONG label
+    (majority is n_true * 2 > k) and the analytic pair_error_rate assumes
+    odd k — even counts must be rejected up front."""
+    with pytest.raises(ValueError, match="odd"):
+        NoisyCrowd(n_assignments=4)
+    with pytest.raises(ValueError, match="odd"):
+        NoisyCrowd(n_assignments=0)
+    crowd = NoisyCrowd(n_assignments=3)  # odd is fine
+    pairs = _match_pairs(1)
+    with pytest.raises(ValueError, match="odd"):
+        crowd.ask_votes(pairs, 0, n_assignments=2)  # escalation too
+    with pytest.raises(ValueError, match="odd"):
+        crowd.pair_error_rate(n_assignments=6)
+
+
+def _match_pairs(n_pairs: int) -> PairSet:
+    u = np.arange(n_pairs, dtype=np.int32)
+    return PairSet(u, u + n_pairs, np.linspace(0.9, 0.1, n_pairs),
+                   np.ones(n_pairs, bool), n_objects=2 * n_pairs)
+
+
+def test_crowd_answer_votes_recorded():
+    pairs = _match_pairs(3)
+    gw = CrowdGateway()
+    gw.post(0, pairs, [0, 1, 2], NoisyCrowd(error_rate=0.3,
+                                            qualification=False, seed=2))
+    for a in gw.poll():
+        assert a.n_assignments == 3
+        # the label IS the majority of the recorded votes
+        assert (sum(v == a.label for v in a.votes) * 2 > len(a.votes))
+        assert 0.0 <= a.agreement <= 1.0
+    gw2 = CrowdGateway()
+    gw2.post(0, pairs, [0], PerfectCrowd())
+    (a,) = gw2.poll()
+    assert a.votes == (POS,) and a.agreement == 1.0
+
+
+def test_gateway_measured_disagreement_matches_analytic():
+    crowd = NoisyCrowd(error_rate=0.2, n_assignments=3,
+                       qualification=False, seed=9)
+    pairs = _match_pairs(1)
+    gw = CrowdGateway()
+    for _ in range(4000):
+        gw.post(0, pairs, [0], crowd)
+        gw.poll()
+    assert abs(gw.measured_disagreement
+               - crowd.expected_minority_fraction()) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Gateway requery escalation ladder
+# ---------------------------------------------------------------------------
+def test_gateway_requery_escalates_then_exhausts():
+    pairs = _match_pairs(4)
+    crowd = NoisyCrowd(error_rate=0.3, qualification=False, seed=1)
+    gw = CrowdGateway()
+    gw.post(0, pairs, [0, 1], crowd)
+    gw.poll()
+    ticket, exhausted = gw.requery(0, pairs, [0, 1], crowd)
+    assert ticket.indices == (0, 1) and exhausted == []
+    answers = gw.poll()
+    assert all(a.n_assignments == 5 for a in answers)  # 3-way -> 5-way
+    assert gw.n_requeried == 2
+    # past max_requeries the pair is exhausted, not re-posted
+    ticket2, exhausted2 = gw.requery(0, pairs, [0, 1], crowd)
+    assert ticket2.indices == () and exhausted2 == [0, 1]
+    assert gw.n_requeried == 2 and gw.in_flight == 0
+    # other rids keep their own ladder
+    ticket3, exhausted3 = gw.requery(7, pairs, [0], crowd)
+    assert ticket3.indices == (0,) and exhausted3 == []
+
+
+# ---------------------------------------------------------------------------
+# nf without a latency model is an unsupported silent no-op — reject it
+# ---------------------------------------------------------------------------
+def test_nf_without_latency_rejected():
+    from repro.serve.join_service import JoinService
+
+    with pytest.raises(ValueError, match="nf"):
+        CrowdGateway(nf=True)
+    with pytest.raises(ValueError, match="nf"):
+        JoinService(nf=True)
+    CrowdGateway(nf=True, latency=LatencyModel(n_workers=2))  # fine
+    with pytest.raises(ValueError, match="conflict_policy"):
+        JoinService(conflict_policy="retry")
+
+
+# ---------------------------------------------------------------------------
+# JoinService satellites: duplicate rid, total_true_matches plumbing
+# ---------------------------------------------------------------------------
+def test_join_service_rejects_duplicate_rid():
+    from repro.serve.join_service import JoinService
+
+    ps = _match_pairs(3)
+    svc = JoinService(lanes=1)
+    svc.submit(ps, PerfectCrowd(), rid=5)
+    with pytest.raises(ValueError, match="duplicate"):
+        svc.submit(ps, PerfectCrowd(), rid=5)  # still queued
+    svc.run()
+    with pytest.raises(ValueError, match="duplicate"):
+        svc.submit(ps, PerfectCrowd(), rid=5)  # already served
+    svc.submit(ps, PerfectCrowd())  # auto-assigned rids keep working
+    assert 5 in svc.results
+
+
+def test_submit_embeddings_total_true_matches_counts_machine_misses():
+    """A true match whose embeddings score below the threshold never reaches
+    the human phase; recall must count it as a miss instead of silently
+    renormalizing to the surviving candidates."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.join_service import JoinService
+
+    D = 8
+    ids_a = np.array([0, 1, 2, 3])
+    ids_b = np.array([0, 1, 2, 3])
+    ea = np.eye(D, dtype=np.float32)[ids_a]
+    eb = np.eye(D, dtype=np.float32)[ids_b]
+    eb[3] = np.eye(D, dtype=np.float32)[7]  # true match, dissimilar records
+    mesh = make_host_mesh(1, 1)
+    truth_fn = lambda r, c: ids_a[r] == ids_b[c]
+    total_true = int((ids_a[:, None] == ids_b[None, :]).sum())  # 4
+
+    svc = JoinService(lanes=1)
+    rid_naive = svc.submit_embeddings(
+        jnp.asarray(ea), jnp.asarray(eb), 0.8, mesh, crowd=PerfectCrowd(),
+        truth_fn=truth_fn, impl="interpret")
+    rid_true = svc.submit_embeddings(
+        jnp.asarray(ea), jnp.asarray(eb), 0.8, mesh, crowd=PerfectCrowd(),
+        truth_fn=truth_fn, impl="interpret", total_true_matches=total_true)
+    res = svc.run()
+    assert res[rid_naive].quality.recall == 1.0   # the silent inflation
+    q = res[rid_true].quality
+    assert q.fn == 1 and q.recall == pytest.approx(3 / 4)
+    assert q.precision == 1.0
+
+
+# ---------------------------------------------------------------------------
+# End to end: noisy serving under both conflict policies and disciplines
+# ---------------------------------------------------------------------------
+def _conflicting_sessions():
+    """Sessions empirically dense enough in confusable structure that 3-way
+    majority voting at 35% worker error produces transitivity conflicts
+    (deterministic: seeded crowd + seeded data)."""
+    from repro.data.entities import make_session_pairsets
+
+    return make_session_pairsets(3, seed=1, n_objects=(25, 35),
+                                 n_pairs=(120, 200), n_entities=4,
+                                 likelihood=(0.7, 0.4, 0.25))
+
+
+@pytest.mark.parametrize("policy", ["drop", "requery"])
+def test_join_service_noisy_round_barrier_conflicts_resolved(policy):
+    from repro.serve.join_service import JoinService
+
+    pairsets = _conflicting_sessions()
+    svc = JoinService(lanes=3, conflict_policy=policy)
+    rids = [svc.submit(ps, NoisyCrowd(error_rate=0.35, qualification=False,
+                                      seed=10 + k))
+            for k, ps in enumerate(pairsets)]
+    res = svc.run()
+    n_conflicts = sum(res[r].n_conflicts for r in rids)
+    assert n_conflicts > 0, "config no longer produces conflicts"
+    for rid, ps in zip(rids, pairsets):
+        r = res[rid]
+        assert r.n_crowdsourced + r.n_deduced == len(ps)  # fully labeled
+        assert transitively_consistent(ps, r.labels)
+    if policy == "requery":
+        assert sum(res[r].n_requeried for r in rids) > 0
+    else:
+        assert all(res[r].n_requeried == 0 for r in rids)
+
+
+@pytest.mark.parametrize("policy", ["drop", "requery"])
+def test_join_service_noisy_async_conflicts_resolved(policy):
+    """Acceptance: an async+NoisyCrowd e2e run emits transitively-consistent
+    final labels under both conflict policies."""
+    from repro.serve.join_service import JoinService
+
+    pairsets = _conflicting_sessions()
+    svc = JoinService(lanes=2, latency=LatencyModel(n_workers=12, seed=3),
+                      async_mode=True, nf=True, conflict_policy=policy)
+    rids = [svc.submit(ps, NoisyCrowd(error_rate=0.45, qualification=False,
+                                      seed=20 + k))
+            for k, ps in enumerate(pairsets)]
+    res = svc.run()
+    for rid, ps in zip(rids, pairsets):
+        r = res[rid]
+        assert r.n_crowdsourced + r.n_deduced == len(ps)
+        assert transitively_consistent(ps, r.labels)
+        assert r.sim_minutes is not None and r.sim_minutes > 0
+    assert sum(res[r].n_conflicts for r in rids) > 0
+
+
+def test_join_service_drop_policy_matches_jax_reference():
+    """Drop is the oracle semantics: a service run must agree with the
+    engine reference label-for-label and conflict-for-conflict when both
+    consume the identical (seeded) noisy answer stream."""
+    from repro.serve.join_service import JoinService
+
+    ps = _conflicting_sessions()[0]
+    svc = JoinService(lanes=1, conflict_policy="drop")
+    rid = svc.submit(ps, NoisyCrowd(error_rate=0.35, qualification=False,
+                                    seed=10))
+    got = svc.run()[rid]
+    ref = crowdsourced_join(
+        ps, NoisyCrowd(error_rate=0.35, qualification=False, seed=10),
+        order="expected", labeler="jax")
+    np.testing.assert_array_equal(got.labels, ref.labels)
+    assert got.n_conflicts == ref.n_conflicts > 0

@@ -94,10 +94,11 @@ def test_jax_engine_full_run_correct_and_no_worse(world):
     u = np.array([e[0] for e in edges], np.int32)
     v = np.array([e[1] for e in edges], np.int32)
     truth_arr = np.where(np.array(labels), POS, NEG).astype(np.int32)
-    out, crowdsourced, rounds = label_parallel_jax(
+    out, crowdsourced, rounds, n_conflicts = label_parallel_jax(
         u, v, n, lambda idx: truth_arr[idx])
     assert (out == truth_arr).all()
     assert crowdsourced.sum() <= P
+    assert n_conflicts == 0  # consistent truth never conflicts
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +137,8 @@ def test_session_state_incremental_bit_identical(seed):
         upd = np.full(m, UNKNOWN, np.int32)
         upd[idx] = truth[idx]
         labels[idx] = truth[idx]
-        state = session_apply_answers(state, jnp.asarray(upd))
+        state, cmask = session_apply_answers(state, jnp.asarray(upd))
+        assert not np.asarray(cmask).any()  # truth answers never conflict
         ref = session_from_labels(u, v, labels, np.zeros(m, bool), n)
         np.testing.assert_array_equal(np.asarray(state.labels), labels)
         np.testing.assert_array_equal(np.asarray(state.roots),
@@ -160,7 +162,7 @@ def test_session_state_published_matches_from_scratch_frontier(seed):
     reveal = rng.permutation(m)[:max(m // 3, 1)]
     upd = np.full(m, UNKNOWN, np.int32)
     upd[reveal] = truth[reveal]
-    state = session_apply_answers(state, jnp.asarray(upd))
+    state, _ = session_apply_answers(state, jnp.asarray(upd))
     labels = np.asarray(state.labels)
     published = (rng.random(m) < 0.4) & (labels == UNKNOWN)
     state = session_mark_published(state, jnp.asarray(published))

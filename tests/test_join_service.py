@@ -45,12 +45,13 @@ def test_batched_engine_matches_per_session(seed):
     batch = label_parallel_jax_batch(
         sessions, lambda b, idx: truths[b][idx])
     for b, (u, v, n) in enumerate(sessions):
-        labels, cs, rounds = label_parallel_jax(
+        labels, cs, rounds, n_conf = label_parallel_jax(
             u, v, n, lambda idx: truths[b][idx])
-        bl, bcs, brounds = batch[b]
+        bl, bcs, brounds, bconf = batch[b]
         np.testing.assert_array_equal(bl, labels)
         np.testing.assert_array_equal(bcs, cs)
         assert brounds == rounds
+        assert bconf == n_conf == 0  # consistent truth never conflicts
         np.testing.assert_array_equal(bl, truths[b])  # and both are correct
 
 
@@ -60,10 +61,11 @@ def test_batched_engine_capacity_padding_is_inert():
     a = label_parallel_jax_batch(sessions, lambda b, idx: truths[b][idx])
     b = label_parallel_jax_batch(sessions, lambda b_, idx: truths[b_][idx],
                                  pair_capacity=64, object_capacity=32)
-    for (la, ca, ra), (lb, cb, rb) in zip(a, b):
+    for (la, ca, ra, fa), (lb, cb, rb, fb) in zip(a, b):
         np.testing.assert_array_equal(la, lb)
         np.testing.assert_array_equal(ca, cb)
         assert ra == rb
+        assert fa == fb
 
 
 # ---------------------------------------------------------------------------
