@@ -12,7 +12,11 @@ Stages, benchmarked separately:
 * conflict folding — the §9 noisy-serving stage: NoisyCrowd sessions that
   provably contradict transitivity, served under both conflict policies;
   reports conflicts detected / requeried and checks the final labels stay
-  transitively consistent (the CI smoke asserts on this payload).
+  transitively consistent (the CI smoke asserts on this payload);
+* ordering — the §10 adaptive-order stage: crowdsourced-pair counts for
+  expected / adaptive / random through the serving path, per-round
+  priority-refresh milliseconds, and a budget-capped session that must
+  stop on budget with consistent labels (also asserted in the CI smoke).
 
 Besides the harness CSV rows, emits one ``# JSON`` line with the raw
 numbers for the perf trajectory.  Set ``BENCH_JOIN_TINY=1`` for a
@@ -295,6 +299,124 @@ def _bench_conflict_folding(out: list, payload: dict) -> None:
     }
 
 
+def _bench_ordering(out: list, payload: dict) -> None:
+    """DESIGN.md §10: crowdsourced-pair counts per labeling order, per-round
+    priority-refresh milliseconds, and a budget-capped session, on the
+    Cora-like dataset (heavy-tailed clusters + confusable entity pairs —
+    the structure the posterior refresh exploits).
+
+    Two comparisons, both CI-asserted: through the *serving path* (batched
+    priority-Borůvka rounds) adaptive must crowdsource strictly fewer pairs
+    than random and no more than static expected; through the *sequential
+    oracle* — where every individual pick matters — adaptive must beat
+    static expected outright.  Labels must agree across orders."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (crowdsourced_join,
+                            session_refresh_priorities_batch,
+                            transitively_consistent)
+    from repro.core.jax_graph import make_session_state_batch, pack_sessions
+    from repro.data.entities import make_paper_dataset
+    from repro.serve.join_service import JoinService
+
+    n_records = 300 if _tiny() else 500
+    cand = make_paper_dataset(seed=0, n_records=n_records).pairs.above(0.3)
+    orders = {}
+    labels_by_order = {}
+    for order in ("expected", "adaptive", "random"):
+        svc = JoinService(lanes=1, order=order)
+        rid = svc.submit(cand, PerfectCrowd())
+        t0 = time.perf_counter()
+        res = svc.run()[rid]
+        secs = time.perf_counter() - t0
+        labels_by_order[order] = res.labels
+        orders[order] = {
+            "crowdsourced": res.n_crowdsourced,
+            "labels_correct": bool((res.labels == cand.truth).all()),
+            "secs": secs,
+        }
+        out.append(row(
+            f"join_service/order_{order}", secs * 1e6,
+            f"crowdsourced={res.n_crowdsourced} "
+            f"correct={orders[order]['labels_correct']}"))
+    consistent_labels = all(
+        (labels_by_order["expected"] == labels_by_order[o]).all()
+        for o in ("adaptive", "random"))
+
+    # the sequential oracle on the full dataset: each pick re-ranks, so the
+    # posterior refresh shows its strict win over the static heuristic
+    seq_cand = make_paper_dataset(seed=0).pairs.above(0.3)
+    seq = {}
+    for order in ("expected", "adaptive", "random"):
+        t0 = time.perf_counter()
+        r = crowdsourced_join(seq_cand, PerfectCrowd(), order=order,
+                              labeler="sequential")
+        seq[order] = {"crowdsourced": r.n_crowdsourced,
+                      "secs": time.perf_counter() - t0}
+    out.append(row(
+        "join_service/order_sequential_oracle", seq["adaptive"]["secs"] * 1e6,
+        f"expected={seq['expected']['crowdsourced']} "
+        f"adaptive={seq['adaptive']['crowdsourced']} "
+        f"random={seq['random']['crowdsourced']}"))
+
+    # per-round refresh cost: one batched refresh dispatch over 8 lanes of
+    # the serving workload's bucket size, timed warm (the price adaptive
+    # lanes pay every round)
+    lanes = 8
+    sessions = [(np.asarray(cand.u), np.asarray(cand.v), cand.n_objects)
+                for _ in range(lanes)]
+    U, V, labels0, valid, n_cap = pack_sessions(sessions)
+    state = make_session_state_batch(U, V, labels0, n_cap)
+    priors = jnp.asarray(np.broadcast_to(cand.likelihood, U.shape))
+    enable = np.ones(lanes, bool)
+    session_refresh_priorities_batch(state, priors, enable)  # warm the jit
+    reps = 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        st = session_refresh_priorities_batch(state, priors, enable)
+    jax.block_until_ready(st.priority)
+    refresh_ms = (time.perf_counter() - t0) * 1e3 / reps
+    out.append(row("join_service/priority_refresh", refresh_ms * 1e3,
+                   f"lanes={lanes} pairs={len(cand)} "
+                   f"refresh_ms={refresh_ms:.3f}"))
+
+    # budget-capped session: a handful of questions' worth of budget on a
+    # session that needs far more — must stop on budget, report the spend,
+    # and still emit transitively consistent labels
+    svc = JoinService(lanes=1)
+    rid = svc.submit(cand, PerfectCrowd(), budget_cents=120.0,
+                     cost_per_assignment=2.0)
+    r = svc.run()[rid]
+    budget = {
+        "budget_cents": 120.0,
+        "n_spent_cents": r.n_spent_cents,
+        "stopped_on_budget": r.stopped_on_budget,
+        "n_crowdsourced": r.n_crowdsourced,
+        "consistent": transitively_consistent(cand, r.labels),
+    }
+    out.append(row(
+        "join_service/budget_capped", 0.0,
+        f"stopped={r.stopped_on_budget} spent={r.n_spent_cents:.0f}c "
+        f"crowdsourced={r.n_crowdsourced} consistent={budget['consistent']}"))
+
+    payload["ordering"] = {
+        "n_records": n_records,
+        "n_pairs": len(cand),
+        "orders": orders,
+        "sequential_oracle": seq,
+        "consistent_labels": consistent_labels,
+        "adaptive_lt_random": (orders["adaptive"]["crowdsourced"]
+                               < orders["random"]["crowdsourced"]),
+        "adaptive_le_expected": (orders["adaptive"]["crowdsourced"]
+                                 <= orders["expected"]["crowdsourced"]),
+        "seq_adaptive_lt_expected": (seq["adaptive"]["crowdsourced"]
+                                     < seq["expected"]["crowdsourced"]),
+        "refresh_ms_per_round": refresh_ms,
+        "budget": budget,
+    }
+
+
 def run() -> list:
     out: list = []
     payload: dict = {}
@@ -303,5 +425,6 @@ def run() -> list:
     _bench_engine_rounds(out, payload)
     _bench_async_gateway(out, payload)
     _bench_conflict_folding(out, payload)
+    _bench_ordering(out, payload)
     out.append("# JSON " + json.dumps({"bench_join_service": payload}))
     return out

@@ -22,16 +22,22 @@ from .jax_graph import (NEG, POS, UNKNOWN, SessionState, boruvka_frontier,
                         session_trust_graph_batch)
 from .join import JoinResult, crowdsourced_join
 from .labeling import (LabelingResult, label_all_crowdsourced,
-                       label_sequential)
+                       label_sequential, label_sequential_adaptive)
 from .metrics import Quality, quality, transitively_consistent
+from .ordering import (adaptive_gains_host, adaptive_order_host,
+                       expected_rank, session_gains, session_gains_batch,
+                       session_refresh_priorities,
+                       session_refresh_priorities_batch)
 from .pairs import PairSet
 from .parallel import (StreamTrace, WallClock, deduction_sweep,
-                       label_parallel, parallel_crowdsourced_pairs,
-                       simulate_stream, simulate_wallclock_parallel_id,
+                       label_parallel, label_parallel_adaptive,
+                       parallel_crowdsourced_pairs, simulate_stream,
+                       simulate_wallclock_parallel_id,
                        simulate_wallclock_sequential)
 from .sorting import (ORDERS, count_crowdsourced, expected_crowdsourced,
-                      get_order, order_expected, order_optimal, order_random,
-                      order_worst)
+                      get_order, order_adaptive, order_expected,
+                      order_optimal, order_random, order_worst,
+                      validate_order)
 
 __all__ = [
     "ClusterGraph", "MATCH", "NON_MATCH", "PairSet",
@@ -42,7 +48,12 @@ __all__ = [
     "simulate_stream", "simulate_wallclock_parallel_id",
     "simulate_wallclock_sequential", "StreamTrace", "WallClock",
     "order_expected", "order_optimal", "order_random", "order_worst",
-    "get_order", "ORDERS", "count_crowdsourced", "expected_crowdsourced",
+    "order_adaptive", "get_order", "validate_order", "ORDERS",
+    "count_crowdsourced", "expected_crowdsourced",
+    "label_sequential_adaptive", "label_parallel_adaptive",
+    "adaptive_gains_host", "adaptive_order_host", "expected_rank",
+    "session_gains", "session_gains_batch", "session_refresh_priorities",
+    "session_refresh_priorities_batch",
     "connected_components", "deduce_batch", "neg_keys", "boruvka_frontier",
     "label_parallel_jax", "UNKNOWN", "NEG", "POS",
     "connected_components_batch", "boruvka_frontier_batch", "deduce_sessions",

@@ -267,6 +267,19 @@ class CrowdGateway:
         self.n_requeried = 0
         self.n_votes = 0
         self.n_minority_votes = 0
+        # per-request cost accounting (DESIGN.md §10): every assignment a
+        # post/requery buys is priced at the caller's per-assignment rate,
+        # so budget-capped sessions can check spend before publishing more
+        self._spent_cents: dict = {}
+        self._assignments: dict = {}
+
+    def spent_cents(self, rid: int) -> float:
+        """Cents spent on a request so far (assignment-level accounting)."""
+        return self._spent_cents.get(rid, 0.0)
+
+    def assignments_posted(self, rid: int) -> int:
+        """Total crowd assignments bought for a request so far."""
+        return self._assignments.get(rid, 0)
 
     @property
     def now_minutes(self) -> float:
@@ -284,13 +297,17 @@ class CrowdGateway:
         return self.n_minority_votes / max(self.n_votes, 1)
 
     def _enqueue(self, rid: int, pairs: PairSet, indices, crowd: Crowd,
-                 n_assignments: Optional[int] = None) -> Tuple[int, ...]:
+                 n_assignments: Optional[int] = None,
+                 cents_per_assignment: float = 0.0) -> Tuple[int, ...]:
         indices = tuple(int(i) for i in indices)
         for i in indices:
             lab, votes = crowd.ask_votes(pairs, i, n_assignments)
             label = POS if lab == MATCH else NEG
             self.n_votes += len(votes)
             self.n_minority_votes += sum(v != label for v in votes)
+            self._assignments[rid] = self._assignments.get(rid, 0) + len(votes)
+            self._spent_cents[rid] = (self._spent_cents.get(rid, 0.0)
+                                      + cents_per_assignment * len(votes))
             self._waiting.append(
                 (rid, i, label, float(pairs.likelihood[i]), votes))
         self.n_posted += len(indices)
@@ -298,37 +315,55 @@ class CrowdGateway:
             self._assign()
         return indices
 
-    def post(self, rid: int, pairs: PairSet, indices,
-             crowd: Crowd) -> CrowdTicket:
+    def post(self, rid: int, pairs: PairSet, indices, crowd: Crowd,
+             cents_per_assignment: float = 0.0) -> CrowdTicket:
         """Post a batch of pair indices; the crowd is asked per pair here
-        (batched transport), answers surface later via ``poll``."""
-        indices = self._enqueue(rid, pairs, indices, crowd)
+        (batched transport), answers surface later via ``poll``.  Each
+        assignment bought is charged at ``cents_per_assignment`` against the
+        request's running spend (``spent_cents``)."""
+        indices = self._enqueue(rid, pairs, indices, crowd,
+                                cents_per_assignment=cents_per_assignment)
         tid = self._next_tid
         self._next_tid += 1
         return CrowdTicket(tid=tid, rid=rid, indices=indices)
 
-    def requery(self, rid: int, pairs: PairSet, indices, crowd: Crowd
+    def requery(self, rid: int, pairs: PairSet, indices, crowd: Crowd,
+                cents_per_assignment: float = 0.0,
+                budget_cents: Optional[float] = None
                 ) -> Tuple[CrowdTicket, List[int]]:
         """Escalation path for rejected answers (DESIGN.md §9): re-post each
         pair with ``crowd.n_assignments + 2 * attempt`` assignments (3-way →
         5-way by default).  Pairs already requeried ``max_requeries`` times
         are NOT re-posted; they come back in the second element — exhausted,
-        for the caller to resolve by trusting the graph.  Returns
-        ``(ticket over the re-posted pairs, exhausted indices)``."""
+        for the caller to resolve by trusting the graph.  With
+        ``budget_cents`` set, escalations the remaining budget cannot cover
+        are not bought either (DESIGN.md §10) — they come back exhausted the
+        same way, so a budgeted session never overspends on requeries.
+        Returns ``(ticket over the re-posted pairs, exhausted indices)``."""
         base = getattr(crowd, "n_assignments", 1)
         by_escalation: dict = {}
         exhausted: List[int] = []
+        planned_cents = 0.0
         for i in (int(j) for j in indices):
             attempt = self._attempts.get((rid, i), 0)
             if attempt >= self.max_requeries:
                 exhausted.append(i)
                 continue
+            k = base + 2 * (attempt + 1)
+            cost = cents_per_assignment * k
+            if budget_cents is not None and \
+                    self.spent_cents(rid) + planned_cents + cost > \
+                    budget_cents + 1e-9:
+                exhausted.append(i)  # unaffordable: the graph outvotes
+                continue
+            planned_cents += cost
             self._attempts[(rid, i)] = attempt + 1
-            by_escalation.setdefault(base + 2 * (attempt + 1), []).append(i)
+            by_escalation.setdefault(k, []).append(i)
         posted: List[int] = []
         for k, idx in sorted(by_escalation.items()):
-            posted.extend(self._enqueue(rid, pairs, idx, crowd,
-                                        n_assignments=k))
+            posted.extend(self._enqueue(
+                rid, pairs, idx, crowd, n_assignments=k,
+                cents_per_assignment=cents_per_assignment))
         self.n_requeried += len(posted)
         tid = self._next_tid
         self._next_tid += 1

@@ -6,8 +6,8 @@ accelerator mesh instead of pointer-chasing union-find on a host.
 
 The engine is organized around a persistent, device-resident
 :class:`SessionState` pytree (DESIGN.md §8): per-session
-``(u, v, labels, published, roots, neg_keys, rounds)``.  State is updated
-**incrementally** as crowd answers land:
+``(u, v, labels, published, roots, neg_keys, rounds, priority)``.  State is
+updated **incrementally** as crowd answers land:
 
 * new POS labels hook into the existing union-find forest via *bounded*
   pointer jumping from the current ``roots`` (``_union_impl`` starting from
@@ -22,7 +22,9 @@ State transformations (all jitted, state-in/state-out):
 
 * ``session_frontier``  — priority-Borůvka selection (parallel Algorithm 3)
   over the live forest; published (in-flight) pairs are assumed matching but
-  excluded from the output (the §5.2 instant-decision contract).
+  excluded from the output (the §5.2 instant-decision contract).  Selection
+  keys on the state's live ``priority`` field (DESIGN.md §10) — positional
+  when fresh, refreshed between rounds by ``core/ordering.py``.
 * ``session_apply_answers`` — fold crowd answers into labels/roots/neg_keys,
   **conflict-aware** (DESIGN.md §9): every incoming answer is screened
   against the live state; an answer contradicting the deduced label is
@@ -319,7 +321,7 @@ def deduce_batch(roots: jax.Array, sorted_neg: jax.Array, qu: jax.Array,
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=("u", "v", "labels", "published", "roots", "neg_keys",
-                 "rounds", "conflicts"),
+                 "rounds", "conflicts", "priority"),
     meta_fields=("n_objects",),
 )
 @dataclasses.dataclass
@@ -335,8 +337,12 @@ class SessionState:
     answers are rejected at the fold (DESIGN.md §9) rather than folded in.
     ``published`` marks in-flight pairs (posted to the crowd, no answer yet);
     ``rounds`` counts answer folds; ``conflicts`` counts rejected answers
-    per pair.  ``n_objects`` is static metadata so the state jits with
-    stable cache keys.
+    per pair.  ``priority`` is the live labeling priority (DESIGN.md §10) —
+    the frontier selects each cluster's minimum-**priority** incident edge;
+    fresh states carry ``arange(P)``, which reproduces the historical
+    position-is-priority order bit-for-bit, and ``core/ordering.py``
+    refreshes it between rounds from the live posterior.  ``n_objects`` is
+    static metadata so the state jits with stable cache keys.
     """
 
     u: jax.Array          # (P,) int32 pair endpoints, labeling order
@@ -347,6 +353,7 @@ class SessionState:
     neg_keys: jax.Array   # (P,) sorted canonical keys of NEG edges
     rounds: jax.Array     # () int32 answer-fold counter
     conflicts: jax.Array  # (P,) int32 rejected contradictory answers per pair
+    priority: jax.Array   # (P,) f32 live labeling priority (lower = sooner)
     n_objects: int        # static
 
 
@@ -378,6 +385,7 @@ def make_session_state(u, v, n_objects: int, pair_capacity: int = 0,
         neg_keys=jnp.full((p_cap,), _key_sentinel(), _key_dtype()),
         rounds=jnp.int32(0),
         conflicts=jnp.zeros(p_cap, jnp.int32),
+        priority=jnp.arange(p_cap, dtype=jnp.float32),
         n_objects=n_cap,
     )
 
@@ -396,6 +404,7 @@ def make_session_state_batch(U, V, labels0, n_objects: int) -> SessionState:
         neg_keys=jnp.full((B, P), _key_sentinel(), _key_dtype()),
         rounds=jnp.zeros((B,), jnp.int32),
         conflicts=jnp.zeros((B, P), jnp.int32),
+        priority=jnp.broadcast_to(jnp.arange(P, dtype=jnp.float32), (B, P)),
         n_objects=int(n_objects),
     )
 
@@ -412,6 +421,7 @@ def _state_from_labels_impl(u, v, labels, published, n_objects: int
     return SessionState(u=u, v=v, labels=labels, published=published,
                         roots=roots, neg_keys=negk, rounds=jnp.int32(0),
                         conflicts=jnp.zeros(u.shape, jnp.int32),
+                        priority=jnp.arange(u.shape[0], dtype=jnp.float32),
                         n_objects=n_objects)
 
 
@@ -660,10 +670,19 @@ def _frontier_impl(state: SessionState) -> jax.Array:
     Starts from the state's roots instead of re-deriving components from the
     edge list: published pairs are hooked in as assumed-matching with one
     bounded union, and each Borůvka round's winners are likewise merged
-    incrementally, with the neg-key index re-canonicalized per round."""
+    incrementally, with the neg-key index re-canonicalized per round.
+
+    Selection runs on ``state.priority`` (DESIGN.md §10): the f32 priorities
+    collapse to dense int32 *ranks* via a stable argsort, so equal priorities
+    tie-break by pair index and the scatter-min machinery below stays exact.
+    With ``priority == arange(P)`` (every fresh state) the ranks are the pair
+    positions and the frontier is bit-identical to the historical
+    position-is-priority selection (property-tested)."""
     u, v, n = state.u, state.v, state.n_objects
     P = u.shape[0]
-    prio = jnp.arange(P, dtype=jnp.int32)
+    order = jnp.argsort(state.priority, stable=True)
+    prio = jnp.zeros((P,), jnp.int32).at[order].set(
+        jnp.arange(P, dtype=jnp.int32))
     inf = jnp.int32(P)
     unknown = state.labels == UNKNOWN
     # the optimistic assumption only covers pairs the graph does not already
@@ -876,9 +895,11 @@ def boruvka_frontier(u: jax.Array, v: jax.Array, labels: jax.Array,
     """Returns a bool mask of pairs to crowdsource now.
 
     Thin from-scratch wrapper: rebuilds a :class:`SessionState` from the
-    label arrays, then runs the state frontier.  Priorities are the array
-    positions (the caller passes pairs already in labeling order), so
-    ``i < j`` means pair i precedes pair j in ω.
+    label arrays, then runs the state frontier.  The rebuilt state carries
+    the positional priority ``arange(P)`` (the caller passes pairs already
+    in labeling order), so ``i < j`` means pair i precedes pair j in ω —
+    the static-order reference the live-priority path (DESIGN.md §10) is
+    property-tested against.
     """
     engine_dispatches.add()
     return _boruvka_frontier_jit(u, v, labels, published, n_objects)
@@ -1014,25 +1035,37 @@ def label_parallel_jax(
     v: np.ndarray,
     n_objects: int,
     crowd_fn,
+    prior: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, np.ndarray, list, int]:
     """Iterate: frontier -> crowd -> deduce, entirely with the array engine.
 
     ``crowd_fn(idx_array) -> int32 array of {NEG, POS}`` labels the frontier.
     Crowd answers contradicting the accumulated evidence are dropped at the
     conflict-aware fold (the pair gets its deduced label) and counted.
+    With ``prior`` (the per-pair machine likelihoods) the labeling order is
+    *adaptive* (DESIGN.md §10): priorities are refreshed from the live
+    posterior before every frontier instead of staying positional.
     Returns (labels, crowdsourced_mask, per-round frontier sizes,
     n_conflicts).
     """
     P = len(u)
     uj = jnp.asarray(u, jnp.int32)
     vj = jnp.asarray(v, jnp.int32)
+    prior_j = None if prior is None else jnp.asarray(prior, jnp.float32)
     labels = jnp.full((P,), UNKNOWN, jnp.int32)
     crowdsourced = np.zeros(P, dtype=bool)
     published = jnp.zeros((P,), dtype=bool)
     rounds = []
     n_conflicts = 0
     while bool(jnp.any(labels == UNKNOWN)):
-        frontier = boruvka_frontier(uj, vj, labels, published, n_objects)
+        if prior_j is None:
+            frontier = boruvka_frontier(uj, vj, labels, published, n_objects)
+        else:
+            from .ordering import session_refresh_priorities
+
+            st = session_from_labels(uj, vj, labels, published, n_objects)
+            st = session_refresh_priorities(st, prior_j)
+            frontier = session_frontier(st)
         idx = np.nonzero(np.asarray(frontier))[0]
         if len(idx) == 0:
             # everything left is deducible

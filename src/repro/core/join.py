@@ -16,10 +16,11 @@ import numpy as np
 from .cluster_graph import ClusterGraph, MATCH
 from .crowd import CostModel, Crowd, PerfectCrowd
 from .jax_graph import NEG, POS, label_parallel_jax
-from .labeling import LabelingResult, label_all_crowdsourced, label_sequential
+from .labeling import (LabelingResult, label_all_crowdsourced,
+                       label_sequential, label_sequential_adaptive)
 from .metrics import Quality, quality
 from .pairs import PairSet
-from .parallel import label_parallel
+from .parallel import label_parallel, label_parallel_adaptive
 from .sorting import get_order
 
 
@@ -51,11 +52,14 @@ def crowdsourced_join(
     cost = cost or CostModel()
     t0 = time.perf_counter()
     perm = get_order(candidates, order, seed=seed)
+    adaptive = order == "adaptive"  # live re-ranking (DESIGN.md §10)
 
     if labeler == "sequential":
-        res = label_sequential(candidates, perm, crowd)
+        res = (label_sequential_adaptive(candidates, crowd) if adaptive
+               else label_sequential(candidates, perm, crowd))
     elif labeler == "parallel":
-        res = label_parallel(candidates, perm, crowd)
+        res = (label_parallel_adaptive(candidates, crowd) if adaptive
+               else label_parallel(candidates, perm, crowd))
     elif labeler == "all":
         res = label_all_crowdsourced(candidates, crowd)
     elif labeler == "jax":
@@ -68,7 +72,8 @@ def crowdsourced_join(
             )
 
         labels_j, crowdsourced_j, rounds, n_conf = label_parallel_jax(
-            ordered.u, ordered.v, ordered.n_objects, crowd_fn
+            ordered.u, ordered.v, ordered.n_objects, crowd_fn,
+            prior=ordered.likelihood if adaptive else None,
         )
         # map back to original indexing
         labels = np.zeros(len(candidates), dtype=bool)

@@ -64,6 +64,54 @@ def label_sequential(pairs: PairSet, order: np.ndarray, crowd: Crowd) -> Labelin
     )
 
 
+def label_sequential_adaptive(pairs: PairSet, crowd: Crowd) -> LabelingResult:
+    """Sequential labeling under the *adaptive* order (DESIGN.md §10): after
+    every crowdsourced answer the remaining pairs re-rank by their live
+    posterior match probability (the machine prior damped by the negative
+    evidence in the same ClusterGraph that drives deduction), instead of
+    walking a static likelihood-sorted list.  Ties break by the static
+    expected order, mirroring the engine's stable rank tie-break.
+
+    Gains only change when the graph changes (an accepted crowd label);
+    deduced pairs add no edges, so each ranking is walked — deducing for
+    free — until the first non-deducible pair, which is the one
+    crowdsourced; the re-ranking cost is O(crowdsourced * P log P)."""
+    from .ordering import adaptive_gains_host, adaptive_order_host, \
+        expected_rank
+
+    n = len(pairs)
+    labels = np.zeros(n, dtype=bool)
+    crowdsourced = np.zeros(n, dtype=bool)
+    g = ClusterGraph(pairs.n_objects)
+    erank = expected_rank(pairs.likelihood)
+    pending = np.ones(n, dtype=bool)
+    while pending.any():
+        gains = adaptive_gains_host(g, pairs.u, pairs.v, pairs.likelihood)
+        idx = np.nonzero(pending)[0]
+        # descending gain, ties by earliest expected-order rank; deduced
+        # pairs along the walk are free and leave the ranking valid
+        for i in adaptive_order_host(gains, erank, idx):
+            o, o2 = int(pairs.u[i]), int(pairs.v[i])
+            d = g.deduce(o, o2)
+            pending[i] = False
+            if d is None:
+                lab = crowd.ask(pairs, int(i))
+                crowdsourced[i] = True
+                if not g.add_label(o, o2, lab):
+                    lab = g.deduce(o, o2)
+                labels[i] = lab == MATCH
+                break  # the graph changed: re-rank the remainder
+            labels[i] = d == MATCH
+    nc = int(crowdsourced.sum())
+    return LabelingResult(
+        labels=labels,
+        crowdsourced=crowdsourced,
+        n_iterations=nc,
+        batch_sizes=[1] * nc,
+        n_conflicts=g.n_conflicts,
+    )
+
+
 def label_all_crowdsourced(pairs: PairSet, crowd: Crowd) -> LabelingResult:
     """The Non-Transitive baseline (§6.1): crowdsource every candidate pair,
     publish all of them at once (one parallel round)."""

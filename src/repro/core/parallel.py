@@ -130,6 +130,57 @@ def label_parallel(pairs: PairSet, order: np.ndarray, crowd: Crowd) -> LabelingR
     )
 
 
+def label_parallel_adaptive(pairs: PairSet, crowd: Crowd) -> LabelingResult:
+    """Algorithm 2 under the *adaptive* order (DESIGN.md §10) — the host
+    oracle for the engine's posterior-refreshed serving path.
+
+    Each round re-ranks the still-unlabeled pairs by their live
+    expected-deduction gain (``core/ordering.py`` host formula over the same
+    ClusterGraph that drives deduction) and runs the Algorithm 3 selection
+    scan in that order, with all labeled pairs scanned first: labeled
+    evidence is position-free on the device (folded into roots/neg-keys
+    before selection), so the oracle gives it the same head start.  Ties
+    break by the static expected order, mirroring the engine's stable rank
+    tie-break over pairs stored in expected order."""
+    from .ordering import adaptive_gains_host, adaptive_order_host, \
+        expected_rank
+
+    n = len(pairs)
+    known: Dict[int, str] = {}
+    crowdsourced = np.zeros(n, dtype=bool)
+    batch_sizes: List[int] = []
+    g = ClusterGraph(pairs.n_objects)
+    erank = expected_rank(pairs.likelihood)
+    while len(known) < n:
+        gains = adaptive_gains_host(g, pairs.u, pairs.v, pairs.likelihood)
+        pending_mask = np.ones(n, bool)
+        pending_mask[list(known)] = False
+        labeled = np.array(sorted(known), np.int64)
+        pending = adaptive_order_host(gains, erank, np.nonzero(pending_mask)[0])
+        order = np.concatenate([labeled, pending])
+        batch = parallel_crowdsourced_pairs(pairs, order, known)
+        assert batch, "no progress — inconsistent state"
+        for i in batch:
+            o, o2 = int(pairs.u[i]), int(pairs.v[i])
+            lab = crowd.ask(pairs, i)
+            crowdsourced[i] = True
+            if not g.add_label(o, o2, lab):
+                lab = g.deduce(o, o2)
+            known[i] = lab
+        batch_sizes.append(len(batch))
+        deduction_sweep(pairs, order, known)
+    labels = np.zeros(n, dtype=bool)
+    for i, lab in known.items():
+        labels[i] = lab == MATCH
+    return LabelingResult(
+        labels=labels,
+        crowdsourced=crowdsourced,
+        n_iterations=len(batch_sizes),
+        batch_sizes=batch_sizes,
+        n_conflicts=g.n_conflicts,
+    )
+
+
 # ---------------------------------------------------------------------------
 # §5.2 event-driven stream simulator (Figure 16)
 # ---------------------------------------------------------------------------

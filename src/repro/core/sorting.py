@@ -5,6 +5,8 @@
 * ``order_expected`` — the practical heuristic (§4.2): descending likelihood.
 * ``order_random``   — seeded shuffle.
 * ``order_worst``    — all non-matching pairs first (paper's "Worst Order").
+* ``order_adaptive`` — the initial permutation of the posterior-refreshed
+  adaptive order (DESIGN.md §10; the live re-ranking is ``core/ordering.py``).
 
 Plus the *exact* expected-crowdsourced-pairs enumerator of §4.2 / Example 4
 (exponential; for tiny instances + tests only): all 2^n labelings are filtered
@@ -32,7 +34,11 @@ def order_expected(pairs: PairSet) -> np.ndarray:
 
 
 def order_optimal(pairs: PairSet) -> np.ndarray:
-    assert pairs.truth is not None, "optimal order needs ground truth"
+    # ValueError (not assert) so the guard survives ``python -O``
+    if pairs.truth is None:
+        raise ValueError(
+            "optimal order needs ground truth: it sorts matching pairs "
+            "first (Theorem 1), which only a simulation can know")
     lik = pairs.likelihood
     # matching first; within each group keep descending likelihood (any
     # within-group order is equivalent by Lemma 3)
@@ -41,7 +47,10 @@ def order_optimal(pairs: PairSet) -> np.ndarray:
 
 
 def order_worst(pairs: PairSet) -> np.ndarray:
-    assert pairs.truth is not None, "worst order needs ground truth"
+    if pairs.truth is None:
+        raise ValueError(
+            "worst order needs ground truth: it sorts non-matching pairs "
+            "first, which only a simulation can know")
     lik = pairs.likelihood
     key = np.where(pairs.truth, 0.0, 1.0) * 10.0 + lik
     return np.argsort(-key, kind="stable")
@@ -52,14 +61,37 @@ def order_random(pairs: PairSet, seed: int = 0) -> np.ndarray:
     return rng.permutation(len(pairs))
 
 
+def order_adaptive(pairs: PairSet) -> np.ndarray:
+    """Initial permutation of the *adaptive* order (DESIGN.md §10): before
+    any label lands, every cluster is a singleton, so the live
+    expected-deduction gain reduces to the clipped likelihood and the
+    adaptive order coincides with the §4.2 heuristic.  The adaptivity — the
+    posterior-refreshed re-ranking between rounds — lives in
+    ``core/ordering.py`` and runs inside the labelers/serving layer."""
+    return order_expected(pairs)
+
+
 ORDERS = {
     "optimal": order_optimal,
     "expected": order_expected,
     "worst": order_worst,
+    "adaptive": order_adaptive,
 }
 
 
+def validate_order(name: str) -> str:
+    """Raise a ValueError listing the valid order names for anything
+    unknown; returns the name unchanged otherwise (single home for the
+    check — the serving layer validates at submit time with it)."""
+    if name != "random" and name not in ORDERS:
+        raise ValueError(
+            f"unknown labeling order {name!r}: valid orders are "
+            f"{sorted([*ORDERS, 'random'])}")
+    return name
+
+
 def get_order(pairs: PairSet, name: str, seed: int = 0) -> np.ndarray:
+    validate_order(name)
     if name == "random":
         return order_random(pairs, seed)
     return ORDERS[name](pairs)

@@ -67,8 +67,11 @@ from repro.core.jax_graph import (
     session_mark_published_batch, session_trust_graph,
     session_trust_graph_batch)
 from repro.core.metrics import Quality, quality
+from repro.core.ordering import (session_gains, session_gains_batch,
+                                 session_refresh_priorities,
+                                 session_refresh_priorities_batch)
 from repro.core.pairs import PairSet
-from repro.core.sorting import get_order
+from repro.core.sorting import get_order, validate_order
 
 
 @dataclasses.dataclass
@@ -78,6 +81,10 @@ class JoinRequest:
     crowd: Crowd
     order: str = "expected"
     total_true_matches: Optional[int] = None
+    # budget-aware scheduling (DESIGN.md §10): crowd spend is capped at
+    # budget_cents, priced per assignment; None = unlimited
+    budget_cents: Optional[float] = None
+    cost_per_assignment: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -99,6 +106,12 @@ class JoinSessionResult:
     # error-tolerance accounting (DESIGN.md §9)
     n_conflicts: int = 0           # contradictory answers rejected at the fold
     n_requeried: int = 0           # rejected pairs re-posted with escalation
+    # budget accounting (DESIGN.md §10): gateway assignment-level spend and
+    # whether the session stopped because it ran out of budget (remaining
+    # pairs resolved by trusting the graph — undeducible ones report
+    # non-matching)
+    n_spent_cents: float = 0.0
+    stopped_on_budget: bool = False
 
     @property
     def n_crowdsourced(self) -> int:
@@ -120,17 +133,33 @@ class _Lane:
     crowdsourced: np.ndarray       # (p,) bool, ordered
     round_sizes: List[int]
     t0: float
+    prior_host: np.ndarray         # (p_cap,) f32 machine likelihood, padded
+    prior_dev: jax.Array           # device copy for single-lane dispatches
+    adaptive: bool                 # live posterior re-ranking (DESIGN.md §10)
+    rate_cents: float              # per-assignment price for this session
+    per_pair_cents: float          # expected price of one crowd question
+    budget_cents: Optional[float]  # None = unlimited
     in_flight: int = 0             # pairs posted to the gateway, unanswered
     n_requeried: int = 0           # escalated re-posts for rejected answers
+    budget_stopped: bool = False   # out of budget; graph resolved the rest
 
     @property
     def done(self) -> bool:
+        if self.budget_stopped:
+            return self.in_flight == 0
         return not (self.labels_host == UNKNOWN).any()
 
     @property
     def bucket(self) -> Tuple[int, int]:
         """jit-cache key: (pair capacity, object capacity)."""
         return (int(self.state.u.shape[0]), self.state.n_objects)
+
+    def affordable(self, gateway: CrowdGateway) -> Optional[int]:
+        """How many more crowd questions the budget buys (None = unlimited)."""
+        if self.budget_cents is None or self.per_pair_cents <= 0:
+            return None
+        rem = self.budget_cents - gateway.spent_cents(self.req.rid)
+        return max(int(rem // self.per_pair_cents), 0)
 
 
 def _bucket(n: int, floor: int = 8) -> int:
@@ -162,12 +191,24 @@ class JoinService:
     picks how rejected contradictory answers resolve (DESIGN.md §9):
     ``"drop"`` (oracle semantics — deduced label wins immediately) or
     ``"requery"`` (escalate through the gateway, then trust the graph).
+
+    Adaptive ordering + budget scheduling (DESIGN.md §10): ``order`` is the
+    default labeling order for submitted requests (``"adaptive"`` refreshes
+    per-pair priorities from the live posterior between rounds);
+    ``budget_cents`` / ``cost_per_assignment`` are session defaults — a
+    budgeted session stops publishing once its gateway spend exhausts the
+    budget and resolves remaining pairs by trusting the graph;
+    ``slots_per_round`` caps the crowd questions posted per round-barrier
+    round across ALL lanes, allocated by marginal expected-deduction gain.
     """
 
     def __init__(self, lanes: int = 4, cost: Optional[CostModel] = None,
                  latency: Optional[LatencyModel] = None,
                  async_mode: bool = False, nf: bool = False,
-                 conflict_policy: str = "drop"):
+                 conflict_policy: str = "drop", order: str = "expected",
+                 budget_cents: Optional[float] = None,
+                 cost_per_assignment: Optional[float] = None,
+                 slots_per_round: Optional[int] = None):
         if conflict_policy not in ("drop", "requery"):
             raise ValueError(
                 f"conflict_policy must be 'drop' or 'requery', "
@@ -176,12 +217,21 @@ class JoinService:
             raise ValueError(
                 "nf=True requires a LatencyModel: non-matching-first steers "
                 "worker pickup order, which does not exist in immediate mode")
+        validate_order(order)
+        if slots_per_round is not None and slots_per_round < 1:
+            raise ValueError(
+                f"slots_per_round must be positive, got {slots_per_round} — "
+                "a zero-slot round could never make progress")
         self.lanes = lanes
         self.cost = cost or CostModel()
         self.latency = latency
         self.async_mode = async_mode
         self.nf = nf
         self.conflict_policy = conflict_policy
+        self.order = order
+        self.budget_cents = budget_cents
+        self.cost_per_assignment = cost_per_assignment
+        self.slots_per_round = slots_per_round
         self.queue: Deque[JoinRequest] = collections.deque()
         self.results: Dict[int, JoinSessionResult] = {}
         self._next_rid = 0
@@ -191,14 +241,23 @@ class JoinService:
         # lanes only when membership changes or a lane finishes.
         self._stacks: Dict[Tuple[int, int],
                            Tuple[Tuple[_Lane, ...], SessionState]] = {}
+        # stacked machine priors per group — static per lane, so the upload
+        # happens once per group membership, not once per round
+        self._prior_stacks: Dict[Tuple[int, int],
+                                 Tuple[Tuple[_Lane, ...], jax.Array]] = {}
 
     # -- request ingestion ---------------------------------------------------
     def submit(self, pairs: PairSet, crowd: Optional[Crowd] = None,
-               order: str = "expected", rid: Optional[int] = None,
-               total_true_matches: Optional[int] = None) -> int:
+               order: Optional[str] = None, rid: Optional[int] = None,
+               total_true_matches: Optional[int] = None,
+               budget_cents: Optional[float] = None,
+               cost_per_assignment: Optional[float] = None) -> int:
         """Enqueue a join over pre-scored candidate pairs; returns the rid.
-        An explicit ``rid`` colliding with a queued or served request is
-        rejected — a silent overwrite would drop the earlier result."""
+        ``order`` / ``budget_cents`` / ``cost_per_assignment`` default to the
+        service-level settings when omitted.  An explicit ``rid`` colliding
+        with a queued or served request is rejected — a silent overwrite
+        would drop the earlier result."""
+        order = validate_order(self.order if order is None else order)
         if rid is None:
             rid = self._next_rid
         elif rid in self.results or any(r.rid == rid for r in self.queue):
@@ -207,17 +266,23 @@ class JoinService:
                 f"{'served' if rid in self.results else 'queued'} — pick a "
                 "fresh rid (or omit it for an auto-assigned one)")
         self._next_rid = max(self._next_rid, rid) + 1
-        self.queue.append(JoinRequest(rid, pairs, crowd or PerfectCrowd(),
-                                      order, total_true_matches))
+        self.queue.append(JoinRequest(
+            rid, pairs, crowd or PerfectCrowd(), order, total_true_matches,
+            budget_cents=self.budget_cents if budget_cents is None
+            else budget_cents,
+            cost_per_assignment=self.cost_per_assignment
+            if cost_per_assignment is None else cost_per_assignment))
         return rid
 
     def submit_embeddings(self, emb_a: jax.Array, emb_b: jax.Array,
                           threshold: float, mesh,
                           crowd: Optional[Crowd] = None,
-                          truth_fn=None, order: str = "expected",
+                          truth_fn=None, order: Optional[str] = None,
                           capacity: Optional[int] = None,
                           impl: str = "auto",
-                          total_true_matches: Optional[int] = None) -> int:
+                          total_true_matches: Optional[int] = None,
+                          budget_cents: Optional[float] = None,
+                          cost_per_assignment: Optional[float] = None) -> int:
         """Machine phase + enqueue: score (emb_a x emb_b) on the mesh with
         the sharded kernel driver, keep pairs above ``threshold`` (cosine,
         mapped to [0, 1] likelihood), and queue the session.
@@ -254,7 +319,9 @@ class JoinService:
             n_objects=n_a + int(emb_b.shape[0]),
         )
         return self.submit(pairs, crowd, order,
-                           total_true_matches=total_true_matches)
+                           total_true_matches=total_true_matches,
+                           budget_cents=budget_cents,
+                           cost_per_assignment=cost_per_assignment)
 
     # -- lane lifecycle ------------------------------------------------------
     def _open_lane(self, req: JoinRequest) -> _Lane:
@@ -269,6 +336,11 @@ class JoinService:
             n_cap = ordered.n_objects
         state = make_session_state(ordered.u, ordered.v, ordered.n_objects,
                                   pair_capacity=p_cap, object_capacity=n_cap)
+        prior_host = np.zeros(p_cap, np.float32)
+        prior_host[:P] = ordered.likelihood
+        rate = (req.cost_per_assignment if req.cost_per_assignment is not None
+                else self.cost.cents_per_assignment)
+        engine_dispatches.add()  # prior upload
         return _Lane(
             req=req,
             perm=perm,
@@ -279,9 +351,17 @@ class JoinService:
             crowdsourced=np.zeros(P, bool),
             round_sizes=[],
             t0=time.perf_counter(),
+            prior_host=prior_host,
+            prior_dev=jnp.asarray(prior_host),
+            adaptive=req.order == "adaptive",
+            rate_cents=float(rate),
+            per_pair_cents=float(rate)
+            * getattr(req.crowd, "n_assignments", 1),
+            budget_cents=req.budget_cents,
         )
 
-    def _finalize(self, lane: _Lane, sim_minutes: Optional[float]) -> None:
+    def _finalize(self, lane: _Lane, sim_minutes: Optional[float],
+                  gateway: Optional[CrowdGateway]) -> None:
         req = lane.req
         P = len(req.pairs)
         labels = np.zeros(P, bool)
@@ -309,6 +389,8 @@ class JoinService:
             fold_rounds=int(np.asarray(lane.state.rounds)),
             n_conflicts=int(np.asarray(lane.state.conflicts)[:lane.p].sum()),
             n_requeried=lane.n_requeried,
+            n_spent_cents=gateway.spent_cents(req.rid) if gateway else 0.0,
+            stopped_on_budget=lane.budget_stopped,
         )
 
     def _retire_done(self, active: List[_Lane],
@@ -317,7 +399,7 @@ class JoinService:
         sim = gateway.now_minutes if self.latency is not None else None
         for lane in active:
             if lane.done:
-                self._finalize(lane, sim)
+                self._finalize(lane, sim, gateway)
             else:
                 still.append(lane)
         return still
@@ -344,15 +426,93 @@ class JoinService:
             del self._stacks[key]
         return _stack_states([l.state for l in lanes])
 
+    def _group_priors(self, key: Tuple[int, int],
+                      lanes: List[_Lane]) -> jax.Array:
+        """The group's stacked (B, P) machine priors, uploaded once per
+        membership (the priors never change after lane open)."""
+        entry = self._prior_stacks.get(key)
+        if entry is not None and len(entry[0]) == len(lanes) and \
+                all(a is b for a, b in zip(entry[0], lanes)):
+            return entry[1]
+        engine_dispatches.add()  # priors upload
+        priors = jnp.asarray(np.stack([l.prior_host for l in lanes]))
+        self._prior_stacks[key] = (tuple(lanes), priors)
+        return priors
+
+    def _allocate(self, staged, gateway: CrowdGateway):
+        """Budget-aware slot allocation (DESIGN.md §10): given each group's
+        frontier, decide which pairs actually post this round.  With no
+        budgeted lane and no ``slots_per_round`` cap the whole frontier
+        posts (no extra dispatches).  Otherwise every frontier pair is
+        scored by its marginal expected-deduction gain (one batched gains
+        dispatch per group), each budgeted lane is capped at what its
+        remaining budget affords, and the global ``slots_per_round`` cap
+        keeps the highest-gain pairs across ALL lanes.  Mutates each
+        stage's mask in place to the posted set; returns the lanes whose
+        budget affords nothing more (to be budget-stopped after the fold)."""
+        stops: List[_Lane] = []
+        constrained = self.slots_per_round is not None or any(
+            lane.budget_cents is not None
+            for _, lanes, _, _ in staged for lane in lanes)
+        if not constrained:
+            return stops
+        cands = []  # (-gain, stage index, lane index, pair index)
+        for si, (key, lanes, stacked, frontier) in enumerate(staged):
+            if not frontier.any():
+                continue
+            if all(lane.adaptive for lane in lanes):
+                # the refresh already wrote -gain into every pending pair's
+                # priority, and the frontier only selects pending pairs —
+                # read it back instead of paying a second gains dispatch
+                gains = -np.asarray(stacked.priority)
+            else:
+                gains = np.asarray(session_gains_batch(
+                    stacked, self._group_priors(key, lanes)))
+            for b, lane in enumerate(lanes):
+                idx = np.nonzero(frontier[b])[0]
+                if len(idx) == 0:
+                    continue
+                afford = lane.affordable(gateway)
+                if afford == 0:
+                    stops.append(lane)
+                    continue
+                if afford is not None and afford < len(idx):
+                    # keep the highest-gain affordable questions
+                    idx = idx[np.argsort(-gains[b, idx],
+                                         kind="stable")][:afford]
+                cands.extend((-float(gains[b, i]), si, b, int(i))
+                             for i in idx)
+        cands.sort()
+        if self.slots_per_round is not None:
+            cands = cands[: self.slots_per_round]
+        for stage in staged:
+            stage[3] = np.zeros_like(stage[3])
+        for _, si, b, i in cands:
+            staged[si][3][b, i] = True
+        return stops
+
+    def _budget_stop(self, lane: _Lane) -> None:
+        """Out of budget: pull every still-unlabeled unpublished pair out of
+        contention and let deduction label what the graph already pins down
+        (``session_trust_graph``); the rest stay UNKNOWN and finalize as
+        non-matching.  One dispatch."""
+        mask = np.asarray(lane.state.labels) == UNKNOWN
+        mask &= ~np.asarray(lane.state.published)
+        engine_dispatches.add()  # mask upload
+        lane.state = session_trust_graph(lane.state, jnp.asarray(mask))
+        lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
+        lane.budget_stopped = True
+
     def _step(self, active: List[_Lane], gateway: CrowdGateway) -> bool:
-        """One engine round over the occupied lanes: batched frontier over
-        bucket-grouped stacked states, one gateway post per lane, a full
-        gateway drain (the round barrier), one fused apply+deduce dispatch.
-        Under ``conflict_policy="requery"`` the round keeps draining and
-        folding until every rejected answer has been escalated to resolution
-        (re-answered clean, or exhausted and trusted to the graph).
-        Returns True iff any lane made progress (crowdsourced or deduced at
-        least one pair)."""
+        """One engine round over the occupied lanes: an optional batched
+        priority refresh (adaptive lanes), batched frontier over
+        bucket-grouped stacked states, budget/slot allocation, one gateway
+        post per lane, a full gateway drain (the round barrier), one fused
+        apply+deduce dispatch.  Under ``conflict_policy="requery"`` the
+        round keeps draining and folding until every rejected answer has
+        been escalated to resolution (re-answered clean, or exhausted and
+        trusted to the graph).  Returns True iff any lane made progress
+        (crowdsourced, deduced, or budget-stopped at least one pair)."""
         requery = self.conflict_policy == "requery"
         groups: Dict[Tuple[int, int], List[_Lane]] = {}
         for lane in active:
@@ -360,23 +520,35 @@ class JoinService:
         staged = []
         for key, lanes in groups.items():
             stacked = self._group_stack(key, lanes)
+            if any(lane.adaptive for lane in lanes):
+                # fold posterior-refreshed priorities into the live states
+                # before selection (DESIGN.md §10), one dispatch per group
+                engine_dispatches.add()
+                stacked = session_refresh_priorities_batch(
+                    stacked, self._group_priors(key, lanes),
+                    np.array([l.adaptive for l in lanes]))
             frontier = np.asarray(session_frontier_batch(stacked))
-            if requery and frontier.any():
+            staged.append([key, lanes, stacked, frontier])
+        budget_stops = self._allocate(staged, gateway)
+        for stage in staged:
+            key, lanes, stacked, posted = stage
+            if requery and posted.any():
                 # published bits gate the fused deduce off still-contested
                 # pairs, so a rejected answer can wait for its escalation
-                engine_dispatches.add()  # frontier-mask upload
+                engine_dispatches.add()  # posted-mask upload
                 stacked = session_mark_published_batch(
-                    stacked, jnp.asarray(frontier))
-            staged.append([key, lanes, stacked, frontier])
-        # post every lane's frontier, then drain: the barrier spans all lanes
-        for _, lanes, _, frontier in staged:
+                    stacked, jnp.asarray(posted))
+                stage[2] = stacked
+        # post every lane's allocation, then drain: the barrier spans lanes
+        for _, lanes, _, posted in staged:
             for b, lane in enumerate(lanes):
-                idx = np.nonzero(frontier[b])[0]
+                idx = np.nonzero(posted[b])[0]
                 if len(idx) == 0:
                     continue
                 lane.round_sizes.append(len(idx))
                 lane.crowdsourced[idx] = True
-                gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd)
+                gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd,
+                             cents_per_assignment=lane.rate_cents)
         # fold/escalate until no group has a conflict awaiting an answer
         pending = True
         while pending:
@@ -408,7 +580,9 @@ class JoinService:
                         if len(cidx) == 0:
                             continue
                         ticket, exhausted = gateway.requery(
-                            lane.req.rid, lane.ordered, cidx, lane.req.crowd)
+                            lane.req.rid, lane.ordered, cidx, lane.req.crowd,
+                            cents_per_assignment=lane.rate_cents,
+                            budget_cents=lane.budget_cents)
                         lane.n_requeried += len(ticket.indices)
                         pending |= bool(ticket.indices)
                         if exhausted:
@@ -421,6 +595,7 @@ class JoinService:
                             stacked, jnp.asarray(exhausted_mask))
                 stage[2] = stacked
         progress = False
+        stop_set = set(id(l) for l in budget_stops)
         for key, lanes, stacked, _ in staged:
             self._stacks[key] = (tuple(lanes), stacked)
             labels = np.asarray(stacked.labels)
@@ -428,23 +603,52 @@ class JoinService:
                 new = labels[b, :lane.p]
                 progress |= bool((new != lane.labels_host).any())
                 lane.labels_host = new
-                if lane.done:  # leaving the group: materialize its state
+                if id(lane) in stop_set and (new == UNKNOWN).any():
+                    # budget exhausted with pairs still open: trust the
+                    # graph for the remainder (DESIGN.md §10) and finalize
+                    lane.state = _index_state(stacked, b)
+                    self._budget_stop(lane)
+                    progress = True
+                elif lane.done:  # leaving the group: materialize its state
                     lane.state = _index_state(stacked, b)
         return progress
 
     # -- asynchronous ID/NF engine -------------------------------------------
     def _publish(self, lane: _Lane, gateway: CrowdGateway) -> int:
         """Select the lane's current frontier and post it (instant decision:
-        in-flight pairs are assumed matching but never re-posted)."""
+        in-flight pairs are assumed matching but never re-posted).  Adaptive
+        lanes refresh priorities from the live posterior first; budgeted
+        lanes post only what the remaining budget affords (highest marginal
+        gain first) and budget-stop when it affords nothing."""
+        if lane.budget_stopped:
+            return 0
+        if lane.adaptive:
+            lane.state = session_refresh_priorities(lane.state,
+                                                    lane.prior_dev)
         frontier = np.asarray(session_frontier(lane.state))
         idx = np.nonzero(frontier)[0]
         if len(idx) == 0:
             return 0
+        afford = lane.affordable(gateway)
+        if afford == 0:
+            self._budget_stop(lane)
+            return 0
+        if afford is not None and afford < len(idx):
+            if lane.adaptive:
+                # the refresh above already wrote -gain into every pending
+                # pair's priority — read it back, no second dispatch
+                gains = -np.asarray(lane.state.priority)
+            else:
+                gains = np.asarray(session_gains(lane.state, lane.prior_dev))
+            idx = idx[np.argsort(-gains[idx], kind="stable")][:afford]
+            frontier = np.zeros_like(frontier)
+            frontier[idx] = True
         lane.round_sizes.append(len(idx))
         lane.crowdsourced[idx] = True
         engine_dispatches.add()  # frontier-mask upload
         lane.state = session_mark_published(lane.state, jnp.asarray(frontier))
-        gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd)
+        gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd,
+                     cents_per_assignment=lane.rate_cents)
         lane.in_flight += len(idx)
         return len(idx)
 
@@ -463,7 +667,9 @@ class JoinService:
         if self.conflict_policy != "requery":
             return
         ticket, exhausted = gateway.requery(
-            lane.req.rid, lane.ordered, cidx, lane.req.crowd)
+            lane.req.rid, lane.ordered, cidx, lane.req.crowd,
+            cents_per_assignment=lane.rate_cents,
+            budget_cents=lane.budget_cents)
         lane.n_requeried += len(ticket.indices)
         lane.in_flight += len(ticket.indices)
         if exhausted:
@@ -561,6 +767,7 @@ class JoinService:
         gateway = CrowdGateway(latency=self.latency, nf=self.nf)
         active: List[_Lane] = []
         self._stacks.clear()  # drop any cache left by an aborted run
+        self._prior_stacks.clear()
         while self.queue or active:
             while self.queue and len(active) < self.lanes:
                 active.append(self._open_lane(self.queue.popleft()))
@@ -574,4 +781,5 @@ class JoinService:
                     f"for rids {[l.req.rid for l in active]}")
             active = self._retire_done(active, gateway)
         self._stacks.clear()
+        self._prior_stacks.clear()
         return dict(self.results)

@@ -1,0 +1,331 @@
+"""Adaptive ordering + budget scheduling (DESIGN.md §10).
+
+Property tests: the priority-carrying frontier with ``priority ==
+arange(P)`` reproduces the historical positional frontier bit-for-bit
+(and is invariant under monotone re-scalings of the priorities), a
+posterior refresh between rounds never revives a published or deduced
+pair, and the host gain oracle matches the device gains.  Plus seeded
+end-to-end checks for the adaptive labelers and the budget-aware
+scheduler.
+"""
+import dataclasses
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (ClusterGraph, MATCH, NEG, NON_MATCH, PairSet,
+                        PerfectCrowd, POS, UNKNOWN, adaptive_gains_host,
+                        boruvka_frontier, crowdsourced_join, get_order,
+                        label_parallel_adaptive, label_sequential_adaptive,
+                        parallel_crowdsourced_pairs, session_frontier,
+                        session_from_labels, session_gains,
+                        session_mark_published, session_refresh_priorities,
+                        transitively_consistent)
+from repro.data.entities import make_session_pairsets
+
+
+@st.composite
+def labeled_world(draw):
+    """A consistent partially-labeled instance with a published subset."""
+    n = draw(st.integers(4, 12))
+    entities = [draw(st.integers(0, 3)) for _ in range(n)]
+    all_edges = list(itertools.combinations(range(n), 2))
+    m = draw(st.integers(3, min(16, len(all_edges))))
+    idx = draw(st.permutations(range(len(all_edges))))
+    edges = [all_edges[i] for i in idx[:m]]
+    truth = np.array([entities[a] == entities[b] for a, b in edges])
+    u = np.array([e[0] for e in edges], np.int32)
+    v = np.array([e[1] for e in edges], np.int32)
+    labels = np.full(m, UNKNOWN, np.int32)
+    for i in range(m):
+        if draw(st.booleans()):
+            labels[i] = POS if truth[i] else NEG
+    published = np.zeros(m, bool)
+    for i in range(m):
+        if labels[i] == UNKNOWN and draw(st.booleans()):
+            published[i] = True
+    lik = np.array([draw(st.floats(0.05, 0.95)) for _ in range(m)],
+                   np.float32)
+    return n, u, v, labels, published, lik
+
+
+# ---------------------------------------------------------------------------
+# priority-carrying frontier vs the positional frontier
+# ---------------------------------------------------------------------------
+@given(labeled_world())
+def test_arange_priority_reproduces_positional_frontier(world):
+    """priority = arange(P) (every fresh state) must select bit-for-bit what
+    the positional from-scratch wrapper selects, and any strictly monotone
+    re-scaling of the priorities must not change the selection (ranks are
+    what matter, not values)."""
+    n, u, v, labels, published, _ = world
+    m = len(u)
+    want = np.asarray(boruvka_frontier(
+        jnp.asarray(u), jnp.asarray(v), jnp.asarray(labels),
+        jnp.asarray(published), n))
+    state = session_from_labels(u, v, labels, published, n)
+    np.testing.assert_array_equal(
+        np.asarray(state.priority), np.arange(m, dtype=np.float32))
+    got = np.asarray(session_frontier(state))
+    np.testing.assert_array_equal(got, want)
+    # strictly monotone transform: same ranks, same frontier
+    scaled = dataclasses.replace(
+        state, priority=jnp.asarray(
+            np.arange(m, dtype=np.float32) * 7.5 - 3.0))
+    np.testing.assert_array_equal(
+        np.asarray(session_frontier(scaled)), want)
+
+
+@given(labeled_world())
+def test_permuted_priority_matches_oracle_scan_in_that_order(world):
+    """With an arbitrary priority permutation over unlabeled-only instances
+    (round 1, no negative edges), the frontier equals the sequential
+    Algorithm 3 scan taken in priority order — DESIGN.md §4's exactness
+    condition, now exercised with priority decoupled from position."""
+    n, u, v, _, _, lik = world
+    m = len(u)
+    perm = np.argsort(lik, kind="stable")  # arbitrary but deterministic
+    prio = np.empty(m, np.float32)
+    prio[perm] = np.arange(m, dtype=np.float32)
+    ps = PairSet(u, v, lik, np.zeros(m, bool), n_objects=n)
+    oracle = set(parallel_crowdsourced_pairs(ps, perm, {}))
+    state = session_from_labels(u, v, np.full(m, UNKNOWN, np.int32),
+                                np.zeros(m, bool), n)
+    state = dataclasses.replace(state, priority=jnp.asarray(prio))
+    got = set(np.nonzero(np.asarray(session_frontier(state)))[0].tolist())
+    assert got == oracle
+
+
+# ---------------------------------------------------------------------------
+# refresh semantics
+# ---------------------------------------------------------------------------
+@given(labeled_world())
+def test_refresh_never_revives_published_or_deduced_pairs(world):
+    """A priority refresh must only re-rank pending pairs: labeled and
+    published pairs keep their priority, the non-priority state fields are
+    untouched, and the refreshed frontier still never selects a published
+    or already-labeled pair."""
+    n, u, v, labels, published, lik = world
+    state = session_from_labels(u, v, labels, published, n)
+    refreshed = session_refresh_priorities(state, jnp.asarray(lik))
+    # non-priority fields bit-identical
+    for f in ("u", "v", "labels", "published", "roots", "neg_keys",
+              "rounds", "conflicts"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(refreshed, f)), np.asarray(getattr(state, f)))
+    # published / labeled pairs keep their old priority
+    frozen = (labels != UNKNOWN) | published
+    np.testing.assert_array_equal(
+        np.asarray(refreshed.priority)[frozen],
+        np.asarray(state.priority)[frozen])
+    # and the frontier still cannot select them
+    frontier = np.asarray(session_frontier(refreshed))
+    assert not (frontier & frozen).any()
+    # explicitly: marking more pairs published and refreshing again still
+    # keeps them out
+    more = session_mark_published(
+        refreshed, jnp.asarray(np.ones(len(u), bool)))
+    more = session_refresh_priorities(more, jnp.asarray(lik))
+    assert not np.asarray(session_frontier(more)).any()
+
+
+@given(labeled_world())
+def test_host_gains_match_device_gains(world):
+    """The ClusterGraph gain oracle and the device gains agree bit-for-bit
+    (the formula is pure f32 mul/add/div on both sides)."""
+    n, u, v, labels, published, lik = world
+    g = ClusterGraph(n)
+    for i in range(len(u)):
+        if labels[i] != UNKNOWN:
+            g.add_label(int(u[i]), int(v[i]),
+                        MATCH if labels[i] == POS else NON_MATCH)
+    state = session_from_labels(u, v, labels, published, n)
+    dev = np.asarray(session_gains(state, jnp.asarray(lik)))
+    host = adaptive_gains_host(g, u, v, lik)
+    np.testing.assert_array_equal(dev, host)
+
+
+# ---------------------------------------------------------------------------
+# adaptive labelers, end to end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("labeler", ["sequential", "parallel", "jax"])
+def test_adaptive_labelers_label_correctly(labeler):
+    for seed in (0, 1):
+        ps = make_session_pairsets(1, seed=seed, n_objects=(14, 20),
+                                   n_pairs=(30, 60), n_entities=3)[0]
+        r = crowdsourced_join(ps, PerfectCrowd(), order="adaptive",
+                              labeler=labeler)
+        np.testing.assert_array_equal(r.labels, ps.truth)
+        assert 0 < r.n_crowdsourced <= len(ps)
+
+
+def test_adaptive_host_parallel_matches_engine():
+    """The host adaptive parallel oracle and the engine adaptive path agree
+    on labels and crowdsourced counts (seeded; the gain formula is bitwise
+    identical on both sides)."""
+    for seed in (2, 3, 4):
+        ps = make_session_pairsets(1, seed=seed, n_objects=(14, 20),
+                                   n_pairs=(30, 60), n_entities=3)[0]
+        host = crowdsourced_join(ps, PerfectCrowd(), order="adaptive",
+                                 labeler="parallel")
+        eng = crowdsourced_join(ps, PerfectCrowd(), order="adaptive",
+                                labeler="jax")
+        np.testing.assert_array_equal(host.labels, eng.labels)
+        assert host.n_crowdsourced >= eng.n_crowdsourced  # position-free
+        # evidence on device can only help (DESIGN.md §4)
+
+
+def test_sequential_adaptive_equals_expected_without_evidence():
+    """With no negative evidence the posterior equals the clipped prior, so
+    the first crowdsourced pick must be the top-likelihood pair."""
+    u = np.array([0, 2, 4], np.int32)
+    v = np.array([1, 3, 5], np.int32)
+    lik = np.array([0.3, 0.9, 0.6], np.float32)
+    ps = PairSet(u, v, lik, np.array([False, True, False]), n_objects=6)
+    asked = []
+
+    class Spy(PerfectCrowd):
+        def ask(self, pairs, i):
+            asked.append(i)
+            return super().ask(pairs, i)
+
+    label_sequential_adaptive(ps, Spy())
+    assert asked[0] == 1  # top likelihood first, like order_expected
+
+
+# ---------------------------------------------------------------------------
+# get_order / sorting guards (satellite bugfix)
+# ---------------------------------------------------------------------------
+def test_get_order_unknown_name_lists_valid_orders():
+    ps = PairSet(np.array([0]), np.array([1]), np.array([0.5], np.float32))
+    with pytest.raises(ValueError, match=r"adaptive.*expected.*optimal"):
+        get_order(ps, "nope")
+
+
+def test_truth_requiring_orders_raise_value_error():
+    """optimal/worst need ground truth; the guard must be a ValueError (not
+    a bare assert) so it survives ``python -O``."""
+    ps = PairSet(np.array([0]), np.array([1]), np.array([0.5], np.float32),
+                 truth=None)
+    with pytest.raises(ValueError, match="ground truth"):
+        get_order(ps, "optimal")
+    with pytest.raises(ValueError, match="ground truth"):
+        get_order(ps, "worst")
+
+
+def test_adaptive_initial_order_is_expected():
+    ps = make_session_pairsets(1, seed=9)[0]
+    np.testing.assert_array_equal(get_order(ps, "adaptive"),
+                                  get_order(ps, "expected"))
+
+
+# ---------------------------------------------------------------------------
+# budget-aware scheduling
+# ---------------------------------------------------------------------------
+def _budget_sessions(seed=11):
+    return make_session_pairsets(3, seed=seed, n_objects=(12, 24),
+                                 n_pairs=(20, 60))
+
+
+@pytest.mark.parametrize("async_mode", [False, True], ids=["barrier", "async"])
+def test_budget_capped_session_stops_within_budget(async_mode):
+    from repro.serve.join_service import JoinService
+
+    pairsets = _budget_sessions()
+    svc = JoinService(lanes=2, async_mode=async_mode)
+    rids = [svc.submit(ps, PerfectCrowd(), budget_cents=8.0,
+                       cost_per_assignment=2.0) for ps in pairsets]
+    res = svc.run()
+    for rid, ps in zip(rids, pairsets):
+        r = res[rid]
+        assert r.stopped_on_budget
+        assert 0 < r.n_spent_cents <= 8.0
+        assert r.n_crowdsourced <= 4  # 8 cents / 2 cents per assignment
+        # unanswered pairs resolve by trusting the graph: still consistent
+        assert transitively_consistent(ps, r.labels)
+
+
+def test_requery_escalations_respect_budget():
+    """A budgeted session under conflict_policy='requery' must not overspend
+    on escalations: unaffordable requeries exhaust (the graph outvotes the
+    crowd) instead of being bought (DESIGN.md §10)."""
+    from repro.core import NoisyCrowd
+    from repro.serve.join_service import JoinService
+
+    for seed in (2, 5):
+        for budget in (20.0, 60.0, 174.0, 216.0):
+            pairsets = make_session_pairsets(
+                2, seed=seed, n_objects=(25, 35), n_pairs=(120, 200),
+                n_entities=4, likelihood=(0.7, 0.4, 0.25))
+            svc = JoinService(lanes=2, conflict_policy="requery")
+            rids = [svc.submit(ps, NoisyCrowd(error_rate=0.45,
+                                              qualification=False,
+                                              seed=seed + k),
+                               budget_cents=budget,
+                               cost_per_assignment=2.0)
+                    for k, ps in enumerate(pairsets)]
+            res = svc.run()
+            for rid, ps in zip(rids, pairsets):
+                assert res[rid].n_spent_cents <= budget, (seed, budget)
+                assert transitively_consistent(ps, res[rid].labels)
+
+
+def test_unlimited_budget_matches_unbudgeted_run():
+    from repro.serve.join_service import JoinService
+
+    pairsets = _budget_sessions()
+    svc = JoinService(lanes=2)
+    rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
+    base = svc.run()
+    svc2 = JoinService(lanes=2, budget_cents=1e9, cost_per_assignment=2.0)
+    rids2 = [svc2.submit(ps, PerfectCrowd()) for ps in pairsets]
+    capped = svc2.run()
+    for a, b in zip(rids, rids2):
+        np.testing.assert_array_equal(base[a].labels, capped[b].labels)
+        assert base[a].n_crowdsourced == capped[b].n_crowdsourced
+        assert not capped[b].stopped_on_budget
+        assert capped[b].n_spent_cents == 2.0 * capped[b].n_crowdsourced
+
+
+def test_slots_per_round_caps_round_sizes_globally():
+    from repro.serve.join_service import JoinService
+
+    pairsets = _budget_sessions(seed=13)
+    svc = JoinService(lanes=3, slots_per_round=4)
+    rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
+    res = svc.run()
+    for rid, ps in zip(rids, pairsets):
+        np.testing.assert_array_equal(res[rid].labels, ps.truth)
+    # the cap is global per round: no single lane can exceed it either
+    assert all(s <= 4 for rid in rids for s in res[rid].round_sizes)
+
+
+def test_adaptive_service_matches_adaptive_engine():
+    from repro.serve.join_service import JoinService
+
+    pairsets = _budget_sessions(seed=17)
+    svc = JoinService(lanes=2, order="adaptive")
+    rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
+    res = svc.run()
+    for rid, ps in zip(rids, pairsets):
+        ref = crowdsourced_join(ps, PerfectCrowd(), order="adaptive",
+                                labeler="jax")
+        np.testing.assert_array_equal(res[rid].labels, ref.labels)
+        assert res[rid].n_crowdsourced == ref.n_crowdsourced
+        assert res[rid].round_sizes == ref.batch_sizes
+
+
+def test_service_rejects_unknown_order():
+    from repro.serve.join_service import JoinService
+
+    with pytest.raises(ValueError, match="valid orders"):
+        JoinService(order="nope")
+    svc = JoinService()
+    ps = _budget_sessions()[0]
+    with pytest.raises(ValueError, match="valid orders"):
+        svc.submit(ps, PerfectCrowd(), order="nope")
+    with pytest.raises(ValueError, match="slots_per_round"):
+        JoinService(slots_per_round=0)
