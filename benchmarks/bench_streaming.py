@@ -1,0 +1,235 @@
+"""Streaming ingest throughput (DESIGN.md §11).
+
+Stages, benchmarked separately:
+
+* incremental machine phase — a corpus grows over E arrival epochs; the
+  cached ``StreamingCandidateIndex`` scores only new-vs-corpus and
+  new-vs-new blocks, and the stage reports grid cells scored vs what
+  resubmitting the full cross product every epoch would have scored (the
+  CI smoke asserts the incremental path does strictly less pair-score
+  work);
+* session growth — per-epoch ``session_grow`` + ``session_append_pairs``
+  (the re-pack cost a live lane pays at an epoch boundary) vs rebuilding
+  the session state from scratch at the grown size;
+* streaming service — the differential harness: k-epoch ``submit_stream``
+  must match a single-shot batch ``submit`` label-for-label and
+  crowdsourced-pair-for-pair (asserted into the payload), with epochs/sec
+  and the crowdsourced-pair savings over the no-streaming alternative of
+  resubmitting the accumulated candidate set from scratch every epoch.
+
+Emits harness CSV rows plus one ``# JSON`` line.  ``BENCH_JOIN_TINY=1``
+selects the seconds-scale CI-smoke configuration.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import PerfectCrowd, next_pow2
+
+from .common import row, split_epochs
+
+
+def _tiny() -> bool:
+    return os.environ.get("BENCH_JOIN_TINY", "") not in ("", "0")
+
+
+def _bench_incremental_scoring(out: list, payload: dict) -> None:
+    """Epoch arrivals through the cached index vs full per-epoch rescoring:
+    same candidate set, strictly fewer grid cells scored."""
+    import jax.numpy as jnp
+
+    from repro.kernels.pair_scores.sharded import (StreamingCandidateIndex,
+                                                   sharded_candidates)
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(0)
+    n0, dn, epochs, dim = (48, 16, 3, 16) if _tiny() else (512, 128, 4, 32)
+    cents = rng.normal(size=(max(n0 // 4, 8), dim))
+    draw = lambda n: (cents[rng.integers(0, len(cents), n)]
+                      + 0.3 * rng.normal(size=(n, dim))).astype(np.float32)
+    mesh = make_host_mesh(1, 1)
+    a0, b0 = draw(n0), draw(n0)
+    arrivals = [(draw(dn), draw(dn)) for _ in range(epochs)]
+
+    idx = StreamingCandidateIndex(0.6, mesh, impl="interpret")
+    n_cand = 0
+    t0 = time.perf_counter()
+    c = idx.append(jnp.asarray(a0), jnp.asarray(b0))
+    n_cand += len(c)
+    for ea, eb in arrivals:
+        c = idx.append(jnp.asarray(ea), jnp.asarray(eb))
+        n_cand += len(c)
+    inc_secs = time.perf_counter() - t0
+
+    # the no-streaming alternative: rescore the accumulated corpora per epoch
+    t0 = time.perf_counter()
+    full_cand = 0
+    a_acc, b_acc = a0, b0
+    full_cells = a_acc.shape[0] * b_acc.shape[0]
+    sharded_candidates(jnp.asarray(a_acc), jnp.asarray(b_acc), 0.6, mesh,
+                       impl="interpret")
+    for ea, eb in arrivals:
+        a_acc = np.concatenate([a_acc, ea])
+        b_acc = np.concatenate([b_acc, eb])
+        full_cells += a_acc.shape[0] * b_acc.shape[0]
+        full_cand = len(sharded_candidates(
+            jnp.asarray(a_acc), jnp.asarray(b_acc), 0.6, mesh,
+            impl="interpret"))
+    full_secs = time.perf_counter() - t0
+
+    assert idx.pairs_scored < full_cells, (idx.pairs_scored, full_cells)
+    assert n_cand == full_cand, (n_cand, full_cand)
+    payload["incremental_scoring"] = {
+        "n0": n0, "dn": dn, "epochs": epochs,
+        "pairs_scored_incremental": idx.pairs_scored,
+        "pairs_scored_full_rescore": full_cells,
+        "work_saved_frac": 1.0 - idx.pairs_scored / full_cells,
+        "candidates": n_cand,
+        "incremental_lt_full": idx.pairs_scored < full_cells,
+        "secs": {"incremental": inc_secs, "full": full_secs},
+    }
+    out.append(row(
+        f"streaming/machine_{n0}+{epochs}x{dn}",
+        inc_secs * 1e6 / (epochs + 1),
+        f"cells={idx.pairs_scored} full={full_cells} "
+        f"saved={1 - idx.pairs_scored / full_cells:.0%} cands={n_cand}"))
+
+
+def _bench_session_growth(out: list, payload: dict) -> None:
+    """Per-epoch re-pack cost: grow+append on the live state vs rebuilding
+    from scratch at the grown capacity."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (make_session_state, session_append_pairs,
+                            session_grow)
+
+    rng = np.random.default_rng(1)
+    n, p0, dp, epochs = (64, 64, 32, 3) if _tiny() else (1024, 2048, 512, 4)
+    all_u = rng.integers(0, n - 1, p0 + dp * epochs).astype(np.int32)
+    all_v = (all_u + 1 + rng.integers(
+        0, n // 2, p0 + dp * epochs)).astype(np.int32) % n
+
+    def grow_path():
+        state = make_session_state(all_u[:p0], all_v[:p0], n)
+        p = p0
+        for _ in range(epochs):
+            cap = max(int(state.u.shape[0]), next_pow2(p + dp, floor=8))
+            state = session_grow(state, cap, n)
+            au = np.zeros(cap, np.int32)
+            av = np.zeros(cap, np.int32)
+            mask = np.zeros(cap, bool)
+            au[p:p + dp] = all_u[p:p + dp]
+            av[p:p + dp] = all_v[p:p + dp]
+            mask[p:p + dp] = True
+            state = session_append_pairs(state, au, av, mask)
+            p += dp
+        return state
+
+    def rebuild_path():
+        p = p0
+        state = make_session_state(all_u[:p0], all_v[:p0], n)
+        for _ in range(epochs):
+            p += dp
+            state = make_session_state(all_u[:p], all_v[:p], n,
+                                       pair_capacity=next_pow2(p, floor=8))
+        return state
+
+    jax.block_until_ready(grow_path().labels)      # warm jit caches
+    jax.block_until_ready(rebuild_path().labels)
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        st = grow_path()
+    jax.block_until_ready(st.labels)
+    grow_ms = (time.perf_counter() - t0) * 1e3 / (reps * epochs)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        st = rebuild_path()
+    jax.block_until_ready(st.labels)
+    rebuild_ms = (time.perf_counter() - t0) * 1e3 / (reps * epochs)
+    payload["session_growth"] = {
+        "n_objects": n, "p0": p0, "dp": dp, "epochs": epochs,
+        "grow_ms_per_epoch": grow_ms,
+        "rebuild_ms_per_epoch": rebuild_ms,
+    }
+    out.append(row(
+        f"streaming/grow_{p0}+{epochs}x{dp}", grow_ms * 1e3,
+        f"grow_ms={grow_ms:.2f} rebuild_ms={rebuild_ms:.2f}"))
+
+
+def _bench_streaming_service(out: list, payload: dict) -> None:
+    """The differential harness as a benchmark: k-epoch submit_stream vs
+    batch submit (must agree), plus the crowdsourced-pair savings over
+    resubmitting the accumulated candidates from scratch every epoch."""
+    from repro.data.entities import make_session_pairsets
+    from repro.serve.join_service import JoinService
+
+    k = 3 if _tiny() else 4
+    n_sessions = 2 if _tiny() else 4
+    pairsets = make_session_pairsets(
+        n_sessions, seed=2, n_objects=(20, 30) if _tiny() else (30, 40),
+        n_pairs=(60, 90) if _tiny() else (120, 200))
+
+    svc_b = JoinService(lanes=2)
+    rids_b = [svc_b.submit(ps, PerfectCrowd()) for ps in pairsets]
+    res_b = svc_b.run()
+
+    epochs = [split_epochs(ps, k, seed=5 + i)
+              for i, ps in enumerate(pairsets)]
+    svc_s = JoinService(lanes=2)
+    rids_s = [svc_s.submit_stream(ep, PerfectCrowd()) for ep in epochs]
+    t0 = time.perf_counter()
+    res_s = svc_s.run()
+    stream_secs = time.perf_counter() - t0
+
+    differential_ok = True
+    stream_crowd = 0
+    for rb, rs in zip(rids_b, rids_s):
+        differential_ok &= bool(
+            (res_b[rb].labels == res_s[rs].labels).all())
+        differential_ok &= (res_b[rb].n_crowdsourced
+                            == res_s[rs].n_crowdsourced)
+        stream_crowd += res_s[rs].n_crowdsourced
+
+    # no-streaming alternative: after each epoch, resubmit everything seen
+    # so far as a fresh request (keeping results fresh costs a full re-join)
+    resubmit_crowd = 0
+    for i, ep in enumerate(epochs):
+        acc = ep[0]
+        for e, chunk in enumerate(ep[1:], start=2):
+            acc = acc.concat(chunk)
+            svc_r = JoinService(lanes=1)
+            rid = svc_r.submit(acc, PerfectCrowd())
+            resubmit_crowd += svc_r.run()[rid].n_crowdsourced
+
+    saved = 1.0 - stream_crowd / max(resubmit_crowd, 1)
+    payload["service"] = {
+        "sessions": n_sessions, "epochs_per_session": k,
+        "differential_ok": differential_ok,
+        "stream_crowdsourced": stream_crowd,
+        "resubmit_crowdsourced": resubmit_crowd,
+        "crowd_saved_frac": saved,
+        "epochs_per_sec": n_sessions * k / max(stream_secs, 1e-9),
+        "secs": stream_secs,
+    }
+    out.append(row(
+        f"streaming/service_{n_sessions}x{k}epochs",
+        stream_secs * 1e6 / (n_sessions * k),
+        f"differential_ok={differential_ok} "
+        f"stream_crowd={stream_crowd} resubmit_crowd={resubmit_crowd} "
+        f"saved={saved:.0%}"))
+
+
+def run() -> list:
+    out: list = []
+    payload: dict = {}
+    _bench_incremental_scoring(out, payload)
+    _bench_session_growth(out, payload)
+    _bench_streaming_service(out, payload)
+    out.append("# JSON " + json.dumps({"bench_streaming": payload}))
+    return out

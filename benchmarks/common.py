@@ -27,3 +27,24 @@ def timed():
     t0 = time.perf_counter()
     yield t
     t["us"] = (time.perf_counter() - t0) * 1e6
+
+
+def split_epochs(pairs, k: int, seed: int):
+    """Split a PairSet into k non-empty arrival epochs (contiguous chunks of
+    the original pair order) for the streaming harness (DESIGN.md §11);
+    per-epoch n_objects derives from the max id actually seen, so later
+    epochs genuinely grow the object universe.  Shared by the streaming
+    bench and the differential tests."""
+    import numpy as np
+
+    from repro.core.pairs import PairSet
+
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.choice(np.arange(1, len(pairs)), size=k - 1,
+                              replace=False))
+    bounds = [0, *cuts.tolist(), len(pairs)]
+    return [
+        PairSet(pairs.u[a:b], pairs.v[a:b], pairs.likelihood[a:b],
+                None if pairs.truth is None else pairs.truth[a:b])
+        for a, b in zip(bounds, bounds[1:])
+    ]

@@ -7,13 +7,13 @@ import time
 
 
 def main() -> None:
-    from . import (bench_join_service, boruvka_parity, fig11_clusters,
-                   fig12_transitive, fig13_orders, fig14_parallel,
-                   fig16_optimizations, noise_sweep, table1_latency,
-                   table2_quality)
+    from . import (bench_join_service, bench_streaming, boruvka_parity,
+                   fig11_clusters, fig12_transitive, fig13_orders,
+                   fig14_parallel, fig16_optimizations, noise_sweep,
+                   table1_latency, table2_quality)
     mods = [fig11_clusters, fig12_transitive, fig13_orders, fig14_parallel,
             fig16_optimizations, table1_latency, table2_quality,
-            boruvka_parity, bench_join_service, noise_sweep]
+            boruvka_parity, bench_join_service, bench_streaming, noise_sweep]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     t0 = time.time()

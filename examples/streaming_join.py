@@ -1,0 +1,70 @@
+"""Streaming ingest (DESIGN.md §11): grow live join sessions as records
+arrive.
+
+A corpus of records opens a join session; three arrival epochs then land
+while the session is live.  Each epoch is scored *incrementally* against
+the cached corpus (new-vs-corpus and new-vs-new blocks only — never the
+full cross product), its candidate pairs fold into the device-resident
+session state via ``session_grow`` / ``session_append_pairs``, and
+everything already labeled or deduced stays paid for.  The example
+contrasts that with the no-streaming alternative of resubmitting the
+accumulated candidate set from scratch every epoch.
+
+    PYTHONPATH=src python examples/streaming_join.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import PerfectCrowd
+from repro.launch.mesh import make_host_mesh
+from repro.serve.join_service import JoinService
+
+rng = np.random.default_rng(0)
+
+# a shared entity universe; records arrive in one seed corpus + 3 epochs
+n_ent, D = 24, 24
+cents = rng.normal(size=(n_ent, D))
+
+
+def arrive(n):
+    ids = rng.integers(0, n_ent, n)
+    emb = jnp.asarray(cents[ids] + 0.3 * rng.normal(size=(n, D)),
+                      jnp.float32)
+    return list(ids), emb
+
+
+a_ids, emb_a = arrive(60)
+b_ids, emb_b = arrive(50)
+epochs = [(arrive(20), arrive(16)) for _ in range(3)]
+
+mesh = make_host_mesh(1, 1)
+
+# -- streaming: one live session, grown per epoch ---------------------------
+svc = JoinService(lanes=1)
+all_a, all_b = list(a_ids), list(b_ids)
+truth_fn = lambda r, c: np.asarray(all_a)[r] == np.asarray(all_b)[c]
+rid = svc.submit_embeddings(emb_a, emb_b, 0.75, mesh, crowd=PerfectCrowd(),
+                            truth_fn=truth_fn, streaming=True)
+for (na, ea), (nb, eb) in epochs:
+    all_a += na
+    all_b += nb
+    svc.append_embeddings(rid, ea, eb)  # incremental: only the new blocks
+res = svc.run()[rid]
+print(f"streaming: {len(res.labels)} pairs, "
+      f"crowdsourced={res.n_crowdsourced}, deduced={res.n_deduced}, "
+      f"precision={res.quality.precision:.2f} "
+      f"recall={res.quality.recall:.2f}")
+
+# -- the alternative: full resubmission after every epoch -------------------
+resubmit_crowd = 0
+ca, cb = emb_a, emb_b
+for (na, ea), (nb, eb) in epochs:
+    ca = jnp.concatenate([ca, ea])
+    cb = jnp.concatenate([cb, eb])
+    fresh = JoinService(lanes=1)
+    r = fresh.submit_embeddings(ca, cb, 0.75, mesh, crowd=PerfectCrowd(),
+                                truth_fn=truth_fn)
+    resubmit_crowd += fresh.run()[r].n_crowdsourced
+print(f"resubmit-from-scratch: {resubmit_crowd} crowd questions "
+      f"across 3 epochs vs {res.n_crowdsourced} streamed "
+      f"({1 - res.n_crowdsourced / resubmit_crowd:.0%} saved)")

@@ -12,12 +12,15 @@ from .jax_graph import (NEG, POS, UNKNOWN, SessionState, boruvka_frontier,
                         deduce_sessions, engine_dispatches,
                         label_parallel_jax, label_parallel_jax_batch,
                         make_session_state, make_session_state_batch,
-                        neg_keys, pack_sessions, pair_key_bits, pair_keys_fit,
+                        neg_keys, next_pow2, pack_sessions, pair_key_bits,
+                        pair_keys_fit,
+                        session_append_pairs, session_append_pairs_batch,
                         session_apply_answers, session_apply_answers_batch,
                         session_deduce, session_deduce_batch,
                         session_fold_answers, session_fold_answers_batch,
                         session_from_labels, session_frontier,
-                        session_frontier_batch, session_mark_published,
+                        session_frontier_batch, session_grow,
+                        session_grow_batch, session_mark_published,
                         session_mark_published_batch, session_trust_graph,
                         session_trust_graph_batch)
 from .join import JoinResult, crowdsourced_join
@@ -65,7 +68,9 @@ __all__ = [
     "session_fold_answers", "session_fold_answers_batch",
     "session_mark_published", "session_mark_published_batch",
     "session_trust_graph", "session_trust_graph_batch",
-    "pair_key_bits", "pair_keys_fit", "engine_dispatches",
+    "session_grow", "session_grow_batch",
+    "session_append_pairs", "session_append_pairs_batch",
+    "pair_key_bits", "pair_keys_fit", "next_pow2", "engine_dispatches",
     "CrowdGateway", "CrowdTicket", "CrowdAnswer",
     "crowdsourced_join", "JoinResult", "quality", "Quality",
     "transitively_consistent",

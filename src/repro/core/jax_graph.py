@@ -109,6 +109,16 @@ engine_dispatches = DispatchCounter()
 # ---------------------------------------------------------------------------
 # Canonical pair keys + representable-range guard (shared helper)
 # ---------------------------------------------------------------------------
+def next_pow2(n: int, floor: int = 1) -> int:
+    """Next power of two >= max(n, floor) — the one bucket-rounding policy
+    shared by the serving layer's capacity buckets, the candidate buffers'
+    suggested capacity, and the benchmarks (stable jit cache keys)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
 def pair_key_bits() -> int:
     """Usable bits for canonical ``lo * n + hi`` pair keys.
 
@@ -437,6 +447,143 @@ def session_from_labels(u, v, labels, published, n_objects: int) -> SessionState
     return _session_from_labels_jit(jnp.asarray(u), jnp.asarray(v),
                                     jnp.asarray(labels), jnp.asarray(published),
                                     n_objects)
+
+
+# ---------------------------------------------------------------------------
+# Streaming growth (DESIGN.md §11): extend a live session's capacities and
+# fold newly-arrived pairs into the padded tail, preserving every invariant
+# ---------------------------------------------------------------------------
+def _grow_impl(state: SessionState, pair_capacity: int, object_capacity: int
+               ) -> SessionState:
+    """Pad-preserving capacity extension.  Every live field keeps its prefix
+    bit-for-bit; new pair slots take the inert pre-labeled POS self-loop
+    (0, 0) exactly as ``make_session_state`` pads them, new object ids join
+    as isolated singletons, and the sorted neg-key index is re-encoded under
+    the enlarged object universe (``lo * n' + hi``).  The re-encoding is a
+    strictly monotone map on real keys (keys compare as (lo, hi) tuples for
+    any modulus > hi) and fixes the sentinel, so the array stays sorted with
+    no merge pass."""
+    P_old = state.u.shape[0]
+    n_old = state.n_objects
+    kdt = state.neg_keys.dtype
+    sentinel = jnp.asarray(jnp.iinfo(kdt).max, kdt)
+    pad_p = pair_capacity - P_old
+    lo, hi, is_pad = _decompose_keys(state.neg_keys, n_old)
+    rekeyed = jnp.where(
+        is_pad, sentinel,
+        canonical_keys(lo, hi, object_capacity))
+    negk = jnp.concatenate([rekeyed, jnp.full((pad_p,), sentinel, kdt)])
+    return SessionState(
+        u=jnp.concatenate([state.u, jnp.zeros(pad_p, jnp.int32)]),
+        v=jnp.concatenate([state.v, jnp.zeros(pad_p, jnp.int32)]),
+        labels=jnp.concatenate(
+            [state.labels, jnp.full(pad_p, POS, jnp.int32)]),
+        published=jnp.concatenate(
+            [state.published, jnp.zeros(pad_p, bool)]),
+        roots=jnp.concatenate(
+            [state.roots,
+             jnp.arange(n_old, object_capacity, dtype=jnp.int32)]),
+        neg_keys=negk,
+        rounds=state.rounds,
+        conflicts=jnp.concatenate(
+            [state.conflicts, jnp.zeros(pad_p, jnp.int32)]),
+        priority=jnp.concatenate(
+            [state.priority,
+             jnp.arange(P_old, pair_capacity, dtype=jnp.float32)]),
+        n_objects=object_capacity,
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("pair_capacity", "object_capacity"))
+def _session_grow_jit(state, pair_capacity, object_capacity):
+    return _grow_impl(state, pair_capacity, object_capacity)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("pair_capacity", "object_capacity"))
+def _session_grow_batch_jit(state, pair_capacity, object_capacity):
+    return jax.vmap(functools.partial(
+        _grow_impl, pair_capacity=pair_capacity,
+        object_capacity=object_capacity))(state)
+
+
+def _check_grow(state: SessionState, pair_capacity: int,
+                object_capacity: int) -> None:
+    if pair_capacity < state.u.shape[-1]:
+        raise ValueError(
+            f"session_grow cannot shrink pair capacity "
+            f"{state.u.shape[-1]} -> {pair_capacity}")
+    if object_capacity < state.n_objects:
+        raise ValueError(
+            f"session_grow cannot shrink object capacity "
+            f"{state.n_objects} -> {object_capacity}")
+    if not pair_keys_fit(object_capacity):
+        raise ValueError(
+            f"growing to n_objects={object_capacity} overflows "
+            f"{pair_key_bits() + 1}-bit pair keys; enable jax_enable_x64 "
+            "for large object universes")
+
+
+def session_grow(state: SessionState, pair_capacity: int,
+                 object_capacity: int) -> SessionState:
+    """Extend a live session to larger pair/object capacities (one
+    dispatch, DESIGN.md §11).  Existing pair slots — labels, published
+    bits, conflicts, priorities, in-flight positions — are untouched, so
+    gateway tickets indexed into the old layout stay valid; a fresh state
+    grown this way is bit-identical to ``make_session_state`` built at the
+    larger capacities."""
+    _check_grow(state, pair_capacity, object_capacity)
+    engine_dispatches.add()
+    return _session_grow_jit(state, pair_capacity, object_capacity)
+
+
+def session_grow_batch(state: SessionState, pair_capacity: int,
+                       object_capacity: int) -> SessionState:
+    """Grow B stacked sessions to shared larger capacities (one dispatch)."""
+    _check_grow(state, pair_capacity, object_capacity)
+    engine_dispatches.add()
+    return _session_grow_batch_jit(state, pair_capacity, object_capacity)
+
+
+def _append_pairs_impl(state: SessionState, new_u: jax.Array,
+                       new_v: jax.Array, mask: jax.Array) -> SessionState:
+    """Claim padded pair slots for newly-arrived candidate pairs: ``mask``
+    marks the slots to fill with ``new_u``/``new_v`` endpoints.  Arrivals
+    enter UNKNOWN and unpublished; no union has happened and no neg key
+    exists for them, so roots and the sorted neg-key index carry over
+    bit-for-bit — exactly what ``make_session_state`` on the concatenated
+    pair list would build (the appended slots keep their positional
+    priority)."""
+    return dataclasses.replace(
+        state,
+        u=jnp.where(mask, new_u.astype(jnp.int32), state.u),
+        v=jnp.where(mask, new_v.astype(jnp.int32), state.v),
+        labels=jnp.where(mask, UNKNOWN, state.labels),
+    )
+
+
+_session_append_pairs_jit = jax.jit(_append_pairs_impl)
+_session_append_pairs_batch_jit = jax.jit(jax.vmap(_append_pairs_impl))
+
+
+def session_append_pairs(state: SessionState, new_u, new_v, mask
+                         ) -> SessionState:
+    """Fold newly-arrived pairs into padded slots (one dispatch).  The mask
+    must claim only padded slots (past the live pair count — the serving
+    layer tracks it); claimed slots become UNKNOWN candidates that the next
+    frontier/deduce sweep treats like any other pending pair."""
+    engine_dispatches.add()
+    return _session_append_pairs_jit(state, jnp.asarray(new_u),
+                                     jnp.asarray(new_v), jnp.asarray(mask))
+
+
+def session_append_pairs_batch(state: SessionState, new_u, new_v, mask
+                               ) -> SessionState:
+    """(B, P) stacked variant of :func:`session_append_pairs`."""
+    engine_dispatches.add()
+    return _session_append_pairs_batch_jit(
+        state, jnp.asarray(new_u), jnp.asarray(new_v), jnp.asarray(mask))
 
 
 # ---------------------------------------------------------------------------

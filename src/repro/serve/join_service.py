@@ -45,6 +45,24 @@ recompiling per request mix.
 The machine phase plugs in through :meth:`submit_embeddings`, which runs the
 mesh-sharded candidate generator (``sharded_candidates``) and feeds the
 resulting pairs straight into a session lane.
+
+**Streaming ingest** (DESIGN.md §11): a production service receives objects
+continuously — new records must be scored against the live corpus and their
+pairs folded into sessions that already have crowd work in flight.
+:meth:`append` routes arrival epochs into an open request; at the next
+ingest point its lane *grows* in place (``session_grow`` +
+``session_append_pairs`` — capacities re-bucketed, neg-key index re-encoded
+under the larger object universe, published bits and gateway tickets
+untouched), migrates to the matching capacity bucket group, and the new
+pairs enter the priority machinery (merged expected ranks, or the adaptive
+posterior refresh).  :meth:`submit_stream` packages a k-epoch arrival
+schedule; with the default up-front schedule the grown state is
+bit-identical to a batch-built one, so the run matches a single-shot
+:meth:`submit` label-for-label (the differential harness in
+``tests/test_streaming.py``).  :meth:`submit_embeddings`
+(``streaming=True``) + :meth:`append_embeddings` run the machine phase
+incrementally: a cached :class:`StreamingCandidateIndex` scores only
+new-vs-corpus and new-vs-new blocks instead of rescoring the cross product.
 """
 from __future__ import annotations
 
@@ -61,11 +79,11 @@ from repro.core.crowd import CostModel, Crowd, CrowdGateway, LatencyModel, \
     PerfectCrowd
 from repro.core.jax_graph import (
     UNKNOWN, POS, SessionState, engine_dispatches, make_session_state,
-    pair_keys_fit, session_apply_answers, session_deduce,
-    session_fold_answers, session_fold_answers_batch, session_frontier,
-    session_frontier_batch, session_mark_published,
-    session_mark_published_batch, session_trust_graph,
-    session_trust_graph_batch)
+    next_pow2, pair_keys_fit, session_append_pairs, session_apply_answers,
+    session_deduce, session_fold_answers, session_fold_answers_batch,
+    session_frontier, session_frontier_batch, session_grow,
+    session_mark_published, session_mark_published_batch,
+    session_trust_graph, session_trust_graph_batch)
 from repro.core.metrics import Quality, quality
 from repro.core.ordering import (session_gains, session_gains_batch,
                                  session_refresh_priorities,
@@ -162,12 +180,24 @@ class _Lane:
         return max(int(rem // self.per_pair_cents), 0)
 
 
+@dataclasses.dataclass
+class _EmbeddingStream:
+    """Per-request incremental machine phase (DESIGN.md §11): the cached
+    scoring index plus the row -> global-object-id maps.  Ids are assigned
+    at arrival (the initial corpus keeps the historical a-row i -> i,
+    b-row j -> n_a + j layout), so appended rows never collide with ids the
+    live session already uses."""
+
+    index: object                  # StreamingCandidateIndex
+    truth_fn: Optional[object]     # truth_fn(rows, cols) over global rows
+    ids_a: np.ndarray              # (N,) int32 global object id per a-row
+    ids_b: np.ndarray              # (M,) int32 global object id per b-row
+    next_id: int                   # first unassigned object id
+
+
 def _bucket(n: int, floor: int = 8) -> int:
     """Next power of two >= n (>= floor) — stable jit cache keys."""
-    b = floor
-    while b < n:
-        b *= 2
-    return b
+    return next_pow2(n, floor)
 
 
 def _stack_states(states: List[SessionState]) -> SessionState:
@@ -241,10 +271,17 @@ class JoinService:
         # lanes only when membership changes or a lane finishes.
         self._stacks: Dict[Tuple[int, int],
                            Tuple[Tuple[_Lane, ...], SessionState]] = {}
-        # stacked machine priors per group — static per lane, so the upload
-        # happens once per group membership, not once per round
+        # stacked machine priors per group — static per lane between ingests,
+        # so the upload happens once per group membership, not once per round
         self._prior_stacks: Dict[Tuple[int, int],
                                  Tuple[Tuple[_Lane, ...], jax.Array]] = {}
+        # streaming ingest (DESIGN.md §11): arrival epochs queued per rid,
+        # consumed at the lane's next ingest point; interleaved streams
+        # release one epoch per engine round instead of all at once
+        self._pending_arrivals: Dict[int, Deque[PairSet]] = {}
+        self._stream_interleave: Dict[int, bool] = {}
+        # incremental machine phase: cached embedding index per streaming rid
+        self._streams: Dict[int, "_EmbeddingStream"] = {}
 
     # -- request ingestion ---------------------------------------------------
     def submit(self, pairs: PairSet, crowd: Optional[Crowd] = None,
@@ -274,6 +311,19 @@ class JoinService:
             if cost_per_assignment is None else cost_per_assignment))
         return rid
 
+    @staticmethod
+    def _check_candidate_overflow(cand) -> None:
+        """Capacity overflow is never silent; the error reports the
+        post-growth per-device capacity that provably fits — what a
+        streaming caller should re-submit (or keep appending) with."""
+        if cand.n_dropped:
+            raise RuntimeError(
+                f"candidate buffers overflowed: {cand.n_dropped} candidates "
+                f"dropped at per-device capacity {cand.capacity} — re-submit "
+                f"with capacity={cand.suggested_capacity} (the post-growth "
+                "per-device capacity this workload needs) or raise the "
+                "threshold")
+
     def submit_embeddings(self, emb_a: jax.Array, emb_b: jax.Array,
                           threshold: float, mesh,
                           crowd: Optional[Crowd] = None,
@@ -282,7 +332,8 @@ class JoinService:
                           impl: str = "auto",
                           total_true_matches: Optional[int] = None,
                           budget_cents: Optional[float] = None,
-                          cost_per_assignment: Optional[float] = None) -> int:
+                          cost_per_assignment: Optional[float] = None,
+                          streaming: bool = False) -> int:
         """Machine phase + enqueue: score (emb_a x emb_b) on the mesh with
         the sharded kernel driver, keep pairs above ``threshold`` (cosine,
         mapped to [0, 1] likelihood), and queue the session.
@@ -297,17 +348,26 @@ class JoinService:
         recall (the paper's §6.4 definition): without it, recall is computed
         against above-threshold candidates only, so a true match the machine
         phase filtered out silently inflates quality.
-        """
-        from repro.kernels.pair_scores.sharded import sharded_candidates
 
-        cand = sharded_candidates(emb_a, emb_b, threshold, mesh,
-                                  capacity=capacity, impl=impl)
-        if cand.n_dropped:
-            raise RuntimeError(
-                f"candidate buffers overflowed: {cand.n_dropped} candidates "
-                f"dropped at per-device capacity {cand.capacity} — raise "
-                "capacity or threshold")
+        ``streaming=True`` keeps the scored corpus cached in a
+        :class:`StreamingCandidateIndex` so later
+        :meth:`append_embeddings` calls score only the new-vs-corpus and
+        new-vs-new blocks (DESIGN.md §11); ``truth_fn`` is retained and must
+        then accept global row/col indices into the grown corpora.
+        """
+        from repro.kernels.pair_scores.sharded import (
+            StreamingCandidateIndex, sharded_candidates)
+
+        if streaming:
+            index = StreamingCandidateIndex(threshold, mesh,
+                                            capacity=capacity, impl=impl)
+            cand = index.append(emb_a, emb_b)
+        else:
+            cand = sharded_candidates(emb_a, emb_b, threshold, mesh,
+                                      capacity=capacity, impl=impl)
+        self._check_candidate_overflow(cand)
         n_a = int(emb_a.shape[0])
+        n_b = int(emb_b.shape[0])
         truth = None
         if truth_fn is not None:
             truth = np.asarray(truth_fn(cand.rows, cand.cols), bool)
@@ -316,12 +376,113 @@ class JoinService:
             v=cand.cols + n_a,
             likelihood=(cand.scores + 1.0) / 2.0,
             truth=truth,
-            n_objects=n_a + int(emb_b.shape[0]),
+            n_objects=n_a + n_b,
         )
-        return self.submit(pairs, crowd, order,
-                           total_true_matches=total_true_matches,
-                           budget_cents=budget_cents,
-                           cost_per_assignment=cost_per_assignment)
+        rid = self.submit(pairs, crowd, order,
+                          total_true_matches=total_true_matches,
+                          budget_cents=budget_cents,
+                          cost_per_assignment=cost_per_assignment)
+        if streaming:
+            self._streams[rid] = _EmbeddingStream(
+                index=index, truth_fn=truth_fn,
+                ids_a=np.arange(n_a, dtype=np.int32),
+                ids_b=np.arange(n_a, n_a + n_b, dtype=np.int32),
+                next_id=n_a + n_b)
+        return rid
+
+    # -- streaming ingest (DESIGN.md §11) ------------------------------------
+    def append(self, rid: int, pairs: PairSet) -> None:
+        """Queue an arrival epoch for an open streaming request: the pairs
+        (ids in the request's shared object universe; new ids allowed) are
+        folded into the live lane at its next ingest point — the session
+        grows in place, in-flight crowd work and budget accounting carry
+        over untouched.  Empty epochs are a no-op."""
+        if rid in self.results:
+            raise ValueError(
+                f"cannot append to rid {rid}: the request already finished "
+                "— submit the new pairs as a fresh request")
+        if not any(r.rid == rid for r in self.queue) and \
+                rid not in self._pending_arrivals:
+            raise ValueError(f"cannot append to unknown rid {rid}")
+        if len(pairs) == 0:
+            return
+        self._pending_arrivals.setdefault(rid,
+                                          collections.deque()).append(pairs)
+
+    def submit_stream(self, epochs, crowd: Optional[Crowd] = None,
+                      order: Optional[str] = None, rid: Optional[int] = None,
+                      total_true_matches: Optional[int] = None,
+                      budget_cents: Optional[float] = None,
+                      cost_per_assignment: Optional[float] = None,
+                      interleave: bool = False) -> int:
+        """Enqueue a join whose candidate pairs arrive over k epochs
+        (DESIGN.md §11).  The first epoch opens the request; the rest are
+        queued as arrivals.  With the default up-front schedule every epoch
+        is ingested before labeling begins, and the grown session state is
+        bit-identical to one built from the concatenated pairs — so the run
+        matches a single-shot :meth:`submit` of the concatenation
+        label-for-label, root-for-root, and crowdsourced-pair-for-pair.
+        ``interleave=True`` instead releases one epoch per engine round, so
+        arrivals land while earlier answers are still in flight (counts may
+        then differ from the batch run — the labeling schedule differs — but
+        labels stay exact and budgets/tickets carry over)."""
+        epochs = list(epochs)
+        if not epochs:
+            raise ValueError("submit_stream needs at least one epoch")
+        rid = self.submit(epochs[0], crowd, order, rid, total_true_matches,
+                          budget_cents=budget_cents,
+                          cost_per_assignment=cost_per_assignment)
+        self._stream_interleave[rid] = interleave
+        for epoch in epochs[1:]:
+            self.append(rid, epoch)
+        return rid
+
+    def append_embeddings(self, rid: int,
+                          new_a: Optional[jax.Array] = None,
+                          new_b: Optional[jax.Array] = None) -> None:
+        """Incremental machine phase + append: score the arriving rows
+        against the cached corpus (new-vs-corpus and new-vs-new blocks
+        only), assign the new rows fresh object ids, and queue the resulting
+        candidate pairs as an arrival epoch for ``rid`` (which must have
+        been submitted with ``streaming=True``)."""
+        stream = self._streams.get(rid)
+        if stream is None:
+            raise ValueError(
+                f"rid {rid} has no cached embedding index — submit it with "
+                "submit_embeddings(..., streaming=True)")
+        cand = stream.index.append(new_a, new_b)
+        if cand.n_dropped:
+            # reject the epoch atomically: the index must forget rows whose
+            # candidates were never ingested, or the stream's row -> id maps
+            # desync and every later epoch skips the ghost rows
+            stream.index.rollback_append()
+            raise RuntimeError(
+                f"candidate buffers overflowed: {cand.n_dropped} candidates "
+                f"dropped at per-device capacity {cand.capacity} — the "
+                "epoch was rolled back (the stream stays usable); re-submit "
+                f"the request with capacity={cand.suggested_capacity} (the "
+                "post-growth per-device capacity this workload needs) or "
+                "split the arrival into smaller epochs")
+        if new_a is not None and len(new_a):
+            fresh = np.arange(stream.next_id, stream.next_id + len(new_a),
+                              dtype=np.int32)
+            stream.ids_a = np.concatenate([stream.ids_a, fresh])
+            stream.next_id += len(new_a)
+        if new_b is not None and len(new_b):
+            fresh = np.arange(stream.next_id, stream.next_id + len(new_b),
+                              dtype=np.int32)
+            stream.ids_b = np.concatenate([stream.ids_b, fresh])
+            stream.next_id += len(new_b)
+        truth = None
+        if stream.truth_fn is not None:
+            truth = np.asarray(stream.truth_fn(cand.rows, cand.cols), bool)
+        self.append(rid, PairSet(
+            u=stream.ids_a[cand.rows],
+            v=stream.ids_b[cand.cols],
+            likelihood=(cand.scores + 1.0) / 2.0,
+            truth=truth,
+            n_objects=stream.next_id,
+        ))
 
     # -- lane lifecycle ------------------------------------------------------
     def _open_lane(self, req: JoinRequest) -> _Lane:
@@ -360,6 +521,99 @@ class JoinService:
             budget_cents=req.budget_cents,
         )
 
+    # -- lane growth (DESIGN.md §11) -----------------------------------------
+    def _flush_stacks(self) -> None:
+        """Materialize every cached group stack back into its lanes and drop
+        the caches — lane states must be authoritative before any lane grows
+        (growth changes a lane's bucket, so its old group is stale)."""
+        for entry in self._stacks.values():
+            self._writeback(entry)
+        self._stacks.clear()
+        self._prior_stacks.clear()
+
+    def _ingest(self, lane: _Lane, new_pairs: PairSet) -> None:
+        """Fold an arrival epoch into a live lane: grow the device state to
+        the new capacity bucket (``pair_keys_fit`` re-checked — bucketing
+        must not push the object universe past the representable key range,
+        and a universe that no longer fits at all raises instead of
+        corrupting the neg-key index), claim padded slots for the new pairs,
+        and refresh the priority layout.  Published bits, gateway tickets,
+        spend accounting, and every already-labeled pair carry over
+        untouched — existing pair slots never move."""
+        req = lane.req
+        offset = lane.p
+        perm_new = get_order(new_pairs, req.order)
+        ordered_new = new_pairs.take(perm_new)
+        req.pairs = req.pairs.concat(new_pairs)
+        lane.perm = np.concatenate([lane.perm, offset + perm_new])
+        lane.ordered = lane.ordered.concat(ordered_new)
+        new_p = offset + len(new_pairs)
+        p_cap = max(int(lane.state.u.shape[0]), _bucket(new_p))
+        n_cap = lane.state.n_objects
+        if lane.ordered.n_objects > n_cap:
+            n_cap = _bucket(lane.ordered.n_objects)
+            if not pair_keys_fit(n_cap):
+                # same clamp as lane open: bucketing must not overflow the
+                # key range when the raw size still fits; session_grow
+                # raises if even the raw size no longer does
+                n_cap = lane.ordered.n_objects
+        if (p_cap, n_cap) != (int(lane.state.u.shape[0]),
+                              lane.state.n_objects):
+            lane.state = session_grow(lane.state, p_cap, n_cap)
+        new_u = np.zeros(p_cap, np.int32)
+        new_v = np.zeros(p_cap, np.int32)
+        mask = np.zeros(p_cap, bool)
+        new_u[offset:new_p] = ordered_new.u
+        new_v[offset:new_p] = ordered_new.v
+        mask[offset:new_p] = True
+        engine_dispatches.add()  # appended-pairs upload
+        lane.state = session_append_pairs(lane.state, new_u, new_v, mask)
+        # merged expected-rank priorities: a likelihood-ranked lane must key
+        # selection on the pair's rank in the FULL accumulated candidate
+        # set, not its arrival position — this is what makes the up-front
+        # stream schedule reproduce the batch run's frontier exactly.
+        # (Padded slots rank after every real pair; frozen pairs' values are
+        # irrelevant to selection, which only compares pending ranks.)
+        if req.order in ("expected", "adaptive"):
+            lik = lane.ordered.likelihood
+            rank = np.empty(new_p, np.float32)
+            rank[np.argsort(-lik, kind="stable")] = np.arange(
+                new_p, dtype=np.float32)
+            prio = np.concatenate(
+                [rank, np.arange(new_p, p_cap, dtype=np.float32)])
+            engine_dispatches.add()  # priority upload
+            lane.state = dataclasses.replace(lane.state,
+                                             priority=jnp.asarray(prio))
+        prior_host = np.zeros(p_cap, np.float32)
+        prior_host[:new_p] = lane.ordered.likelihood
+        lane.prior_host = prior_host
+        engine_dispatches.add()  # prior re-upload
+        lane.prior_dev = jnp.asarray(prior_host)
+        lane.labels_host = np.concatenate(
+            [lane.labels_host,
+             np.full(len(new_pairs), UNKNOWN, np.int32)])
+        lane.crowdsourced = np.concatenate(
+            [lane.crowdsourced, np.zeros(len(new_pairs), bool)])
+        lane.p = new_p
+
+    def _ingest_pending(self, lane: _Lane) -> bool:
+        """Consume queued arrival epochs for this lane — all of them for the
+        default up-front schedule, one per call for an interleaved stream.
+        Ends with a deduce sweep so arrivals the accumulated evidence
+        already pins down never wedge a frontier-empty round.  (A
+        budget-stopped lane still ingests: its arrivals resolve the same
+        trust-the-graph way as the pairs the budget ran out on.)"""
+        pending = self._pending_arrivals.get(lane.req.rid)
+        if not pending:
+            return False
+        n = 1 if self._stream_interleave.get(lane.req.rid) else len(pending)
+        for _ in range(n):
+            self._ingest(lane, pending.popleft())
+        if not pending:
+            del self._pending_arrivals[lane.req.rid]
+        self._sweep_lane(lane)
+        return True
+
     def _finalize(self, lane: _Lane, sim_minutes: Optional[float],
                   gateway: Optional[CrowdGateway]) -> None:
         req = lane.req
@@ -392,13 +646,17 @@ class JoinService:
             n_spent_cents=gateway.spent_cents(req.rid) if gateway else 0.0,
             stopped_on_budget=lane.budget_stopped,
         )
+        self._streams.pop(req.rid, None)
+        self._stream_interleave.pop(req.rid, None)
 
     def _retire_done(self, active: List[_Lane],
                      gateway: Optional[CrowdGateway]) -> List[_Lane]:
         still: List[_Lane] = []
         sim = gateway.now_minutes if self.latency is not None else None
         for lane in active:
-            if lane.done:
+            # a lane with arrival epochs still queued is not finished, even
+            # when every pair it has seen so far is labeled
+            if lane.done and not self._pending_arrivals.get(lane.req.rid):
                 self._finalize(lane, sim, gateway)
             else:
                 still.append(lane)
@@ -690,6 +948,15 @@ class JoinService:
                 lane = self._open_lane(self.queue.popleft())
                 active.append(lane)
                 refilled = True
+            if any(self._pending_arrivals.get(l.req.rid) for l in active):
+                # arrivals are ingested before a fresh lane's first publish
+                # (up-front streams) and once per event-loop pass for
+                # interleaved streams; a lane that went idle waiting on its
+                # next epoch re-publishes immediately
+                for lane in active:
+                    if self._ingest_pending(lane) and lane.in_flight == 0 \
+                            and lane.round_sizes and not lane.done:
+                        self._publish(lane, gateway)
             if refilled:
                 # zero-pair sessions are born done — finalize without posting
                 active = self._retire_done(active, gateway)
@@ -711,6 +978,9 @@ class JoinService:
                 active = self._retire_done(active, gateway)
                 if not answers and not posted and not gateway.in_flight \
                         and active:
+                    if any(self._pending_arrivals.get(l.req.rid)
+                           for l in active):
+                        continue  # queued arrival epochs ingest next pass
                     raise RuntimeError(
                         "join engine stuck: no frontier and nothing "
                         f"deducible for rids {[l.req.rid for l in active]}")
@@ -771,9 +1041,21 @@ class JoinService:
         while self.queue or active:
             while self.queue and len(active) < self.lanes:
                 active.append(self._open_lane(self.queue.popleft()))
+            if any(self._pending_arrivals.get(l.req.rid) for l in active):
+                # arrival epochs land before the round's frontier: lane
+                # states must be authoritative (not cached in a group
+                # stack) while they grow and re-bucket.  Arrivals for rids
+                # still waiting in the queue don't disturb the group caches.
+                self._flush_stacks()
+                for lane in active:
+                    self._ingest_pending(lane)
             # zero-pair sessions are born done — finalize without a step
             active = self._retire_done(active, gateway)
             if not active:
+                continue
+            if all(lane.done for lane in active):
+                # every open lane is just waiting on queued arrival epochs
+                # (interleaved streams); ingest resumes next iteration
                 continue
             if not self._step(active, gateway):
                 raise RuntimeError(

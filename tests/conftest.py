@@ -90,3 +90,82 @@ def paper_ds():
 def product_ds():
     from repro.data.entities import make_product_dataset
     return make_product_dataset()
+
+
+# ---------------------------------------------------------------------------
+# Shared seeded session/corpus builders.  Session-scoped factories (safe
+# under @given: no function-scoped-fixture health check), one home for the
+# session setup that used to be copy-pasted across test_jax_graph.py,
+# test_conflicts.py, and test_ordering.py.
+# ---------------------------------------------------------------------------
+def _random_world(rng):
+    """One random join session with consistent ground truth: entity-clustered
+    objects, a random subset of candidate pairs.  Returns (n, u, v, truth)
+    with truth in engine encoding (POS/NEG int32)."""
+    import itertools
+
+    from repro.core import NEG, POS
+
+    n = int(rng.integers(4, 16))
+    ent = rng.integers(0, 4, n)
+    all_e = list(itertools.combinations(range(n), 2))
+    m = int(rng.integers(3, min(24, len(all_e)) + 1))
+    sel = rng.permutation(len(all_e))[:m]
+    u = np.array([all_e[i][0] for i in sel], np.int32)
+    v = np.array([all_e[i][1] for i in sel], np.int32)
+    truth = np.where(ent[u] == ent[v], POS, NEG).astype(np.int32)
+    return n, u, v, truth
+
+
+@pytest.fixture(scope="session")
+def make_random_world():
+    """Factory: ``make_random_world(rng) -> (n, u, v, truth)``."""
+    return _random_world
+
+
+def _session_pairsets(n_sessions=3, seed=11, n_objects=(12, 24),
+                      n_pairs=(20, 60), **kwargs):
+    from repro.data.entities import make_session_pairsets
+    return make_session_pairsets(n_sessions, seed=seed, n_objects=n_objects,
+                                 n_pairs=n_pairs, **kwargs)
+
+
+@pytest.fixture(scope="session")
+def session_pairsets():
+    """Factory for entity-clustered PairSet sessions (likelihoods correlated
+    with truth — the machine-phase assumption)."""
+    return _session_pairsets
+
+
+def _conflicting_pairsets(n_sessions=3, seed=1):
+    """Sessions empirically dense enough in confusable structure that 3-way
+    majority voting at 35% worker error produces transitivity conflicts
+    (deterministic: seeded crowd + seeded data)."""
+    return _session_pairsets(n_sessions, seed=seed, n_objects=(25, 35),
+                             n_pairs=(120, 200), n_entities=4,
+                             likelihood=(0.7, 0.4, 0.25))
+
+
+@pytest.fixture(scope="session")
+def conflicting_pairsets():
+    return _conflicting_pairsets
+
+
+def _entity_embeddings(rng, n_entities, n_rows, dim=16, noise=0.15,
+                       centroids=None):
+    """Entity-clustered embedding corpus: rows drawn around shared centroids
+    so cosine thresholding yields real candidate structure.  Returns
+    (entity_ids, embeddings, centroids) — pass ``centroids`` back in to draw
+    later arrival epochs from the same entity universe."""
+    if centroids is None:
+        centroids = rng.normal(size=(n_entities, dim))
+    ids = rng.integers(0, n_entities, n_rows)
+    emb = (centroids[ids] + noise * rng.normal(size=(n_rows, dim))
+           ).astype(np.float32)
+    return ids, emb, centroids
+
+
+@pytest.fixture(scope="session")
+def entity_embeddings():
+    """Factory: ``entity_embeddings(rng, n_entities, n_rows, ...)``."""
+    return _entity_embeddings

@@ -8,8 +8,6 @@ and expose measured worker disagreement; and noisy end-to-end serving runs
 must finish with transitively-consistent labels under both conflict
 policies and both serving disciplines.
 """
-import itertools
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -25,20 +23,9 @@ from repro.core.pairs import PairSet
 
 
 # ---------------------------------------------------------------------------
-# Stream-parity harness: SessionState fold vs ClusterGraph, answer for answer
+# Stream-parity harness: SessionState fold vs ClusterGraph, answer for
+# answer.  Worlds come from the shared conftest builder (make_random_world).
 # ---------------------------------------------------------------------------
-def _random_world(rng):
-    n = int(rng.integers(4, 16))
-    ent = rng.integers(0, 4, n)
-    all_e = list(itertools.combinations(range(n), 2))
-    m = int(rng.integers(3, min(24, len(all_e)) + 1))
-    sel = rng.permutation(len(all_e))[:m]
-    u = np.array([all_e[i][0] for i in sel], np.int32)
-    v = np.array([all_e[i][1] for i in sel], np.int32)
-    truth = np.where(ent[u] == ent[v], POS, NEG).astype(np.int32)
-    return n, u, v, truth
-
-
 def _noisy_chunks(rng, order, truth, labels_ref, flip):
     """Next chunk of answers for still-unlabeled pairs (the only pairs any
     driver ever posts), each flipped against truth with prob ``flip``.
@@ -69,12 +56,12 @@ def _reference_apply(g, u, v, labels_ref, chunk):
                 labels_ref[i] = POS if d == MATCH else NEG
 
 
-def _check_stream_parity(seed: int, flip: float = 0.35) -> int:
+def _check_stream_parity(world_builder, seed: int, flip: float = 0.35) -> int:
     """Fold one noisy stream through the engine and the oracle in lockstep;
     assert label, conflict-count, and state-invariant parity after every
     fold.  Returns the total conflict count (for coverage assertions)."""
     rng = np.random.default_rng(seed)
-    n, u, v, truth = _random_world(rng)
+    n, u, v, truth = world_builder(rng)
     m = len(u)
     state = make_session_state(u, v, n)
     g = ClusterGraph(n)
@@ -102,28 +89,29 @@ def _check_stream_parity(seed: int, flip: float = 0.35) -> int:
 
 
 @pytest.mark.parametrize("seed", range(8))
-def test_fold_stream_matches_cluster_graph(seed):
-    _check_stream_parity(seed)
+def test_fold_stream_matches_cluster_graph(make_random_world, seed):
+    _check_stream_parity(make_random_world, seed)
 
 
-def test_fold_stream_conflicts_actually_exercised():
+def test_fold_stream_conflicts_actually_exercised(make_random_world):
     """The parity seeds must include real contradictions — otherwise the
     conflict path is vacuously 'identical'."""
-    total = sum(_check_stream_parity(seed) for seed in range(8))
+    total = sum(_check_stream_parity(make_random_world, seed)
+                for seed in range(8))
     assert total > 0, "no conflicts across all parity seeds"
 
 
 @given(st.integers(0, 10**6))
-def test_fold_stream_matches_cluster_graph_property(seed):
-    _check_stream_parity(seed)
+def test_fold_stream_matches_cluster_graph_property(make_random_world, seed):
+    _check_stream_parity(make_random_world, seed)
 
 
-def test_fold_stream_matches_cluster_graph_batched():
+def test_fold_stream_matches_cluster_graph_batched(make_random_world):
     """Same lockstep parity through the vmapped batched fold: B sessions
     with independent noisy streams advance in stacked folds."""
     B = 3
     rngs = [np.random.default_rng(100 + b) for b in range(B)]
-    worlds = [_random_world(r) for r in rngs]
+    worlds = [make_random_world(r) for r in rngs]
     sessions = [(u, v, n) for n, u, v, _ in worlds]
     U, V, labels0, valid, n_cap = pack_sessions(sessions)
     state = make_session_state_batch(U, V, labels0, n_cap)
@@ -302,23 +290,14 @@ def test_submit_embeddings_total_true_matches_counts_machine_misses():
 
 # ---------------------------------------------------------------------------
 # End to end: noisy serving under both conflict policies and disciplines
+# (conflict-dense sessions come from the shared conftest builder)
 # ---------------------------------------------------------------------------
-def _conflicting_sessions():
-    """Sessions empirically dense enough in confusable structure that 3-way
-    majority voting at 35% worker error produces transitivity conflicts
-    (deterministic: seeded crowd + seeded data)."""
-    from repro.data.entities import make_session_pairsets
-
-    return make_session_pairsets(3, seed=1, n_objects=(25, 35),
-                                 n_pairs=(120, 200), n_entities=4,
-                                 likelihood=(0.7, 0.4, 0.25))
-
-
 @pytest.mark.parametrize("policy", ["drop", "requery"])
-def test_join_service_noisy_round_barrier_conflicts_resolved(policy):
+def test_join_service_noisy_round_barrier_conflicts_resolved(
+        conflicting_pairsets, policy):
     from repro.serve.join_service import JoinService
 
-    pairsets = _conflicting_sessions()
+    pairsets = conflicting_pairsets()
     svc = JoinService(lanes=3, conflict_policy=policy)
     rids = [svc.submit(ps, NoisyCrowd(error_rate=0.35, qualification=False,
                                       seed=10 + k))
@@ -337,12 +316,13 @@ def test_join_service_noisy_round_barrier_conflicts_resolved(policy):
 
 
 @pytest.mark.parametrize("policy", ["drop", "requery"])
-def test_join_service_noisy_async_conflicts_resolved(policy):
+def test_join_service_noisy_async_conflicts_resolved(conflicting_pairsets,
+                                                     policy):
     """Acceptance: an async+NoisyCrowd e2e run emits transitively-consistent
     final labels under both conflict policies."""
     from repro.serve.join_service import JoinService
 
-    pairsets = _conflicting_sessions()
+    pairsets = conflicting_pairsets()
     svc = JoinService(lanes=2, latency=LatencyModel(n_workers=12, seed=3),
                       async_mode=True, nf=True, conflict_policy=policy)
     rids = [svc.submit(ps, NoisyCrowd(error_rate=0.45, qualification=False,
@@ -357,13 +337,14 @@ def test_join_service_noisy_async_conflicts_resolved(policy):
     assert sum(res[r].n_conflicts for r in rids) > 0
 
 
-def test_join_service_drop_policy_matches_jax_reference():
+def test_join_service_drop_policy_matches_jax_reference(
+        conflicting_pairsets):
     """Drop is the oracle semantics: a service run must agree with the
     engine reference label-for-label and conflict-for-conflict when both
     consume the identical (seeded) noisy answer stream."""
     from repro.serve.join_service import JoinService
 
-    ps = _conflicting_sessions()[0]
+    ps = conflicting_pairsets()[0]
     svc = JoinService(lanes=1, conflict_policy="drop")
     rid = svc.submit(ps, NoisyCrowd(error_rate=0.35, qualification=False,
                                     seed=10))

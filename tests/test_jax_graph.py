@@ -103,28 +103,16 @@ def test_jax_engine_full_run_correct_and_no_worse(world):
 
 # ---------------------------------------------------------------------------
 # Persistent SessionState: incremental path bit-identical to from-scratch
-# (DESIGN.md §8)
+# (DESIGN.md §8).  Worlds come from the shared conftest builder.
 # ---------------------------------------------------------------------------
-def _random_world(rng):
-    n = int(rng.integers(4, 16))
-    ent = rng.integers(0, 4, n)
-    all_e = list(itertools.combinations(range(n), 2))
-    m = int(rng.integers(3, min(24, len(all_e)) + 1))
-    sel = rng.permutation(len(all_e))[:m]
-    u = np.array([all_e[i][0] for i in sel], np.int32)
-    v = np.array([all_e[i][1] for i in sel], np.int32)
-    truth = np.where(ent[u] == ent[v], POS, NEG).astype(np.int32)
-    return n, u, v, truth
-
-
 @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
-def test_session_state_incremental_bit_identical(seed):
+def test_session_state_incremental_bit_identical(make_random_world, seed):
     """Fold answers into a persistent SessionState in random chunks; after
     every fold the incrementally-maintained roots and sorted neg-key index
     must equal a from-scratch rebuild bit-for-bit, and the state frontier
     must equal the from-scratch wrapper's."""
     rng = np.random.default_rng(seed)
-    n, u, v, truth = _random_world(rng)
+    n, u, v, truth = make_random_world(rng)
     m = len(u)
     state = make_session_state(u, v, n)
     labels = np.full(m, UNKNOWN, np.int32)
@@ -151,11 +139,12 @@ def test_session_state_incremental_bit_identical(seed):
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_session_state_published_matches_from_scratch_frontier(seed):
+def test_session_state_published_matches_from_scratch_frontier(
+        make_random_world, seed):
     """In-flight (published) pairs are assumed matching but excluded from the
     frontier; the incremental state agrees with the from-scratch wrapper."""
     rng = np.random.default_rng(100 + seed)
-    n, u, v, truth = _random_world(rng)
+    n, u, v, truth = make_random_world(rng)
     m = len(u)
     state = make_session_state(u, v, n)
     # reveal a third of the labels, publish a random subset of the rest
@@ -174,9 +163,10 @@ def test_session_state_published_matches_from_scratch_frontier(seed):
     assert (ded[published] == labels[published]).all()
 
 
-def test_session_deduce_matches_from_scratch_without_published():
+def test_session_deduce_matches_from_scratch_without_published(
+        make_random_world):
     rng = np.random.default_rng(9)
-    n, u, v, truth = _random_world(rng)
+    n, u, v, truth = make_random_world(rng)
     m = len(u)
     reveal = rng.permutation(m)[:m // 2]
     labels = np.full(m, UNKNOWN, np.int32)

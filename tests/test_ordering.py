@@ -24,7 +24,6 @@ from repro.core import (ClusterGraph, MATCH, NEG, NON_MATCH, PairSet,
                         session_from_labels, session_gains,
                         session_mark_published, session_refresh_priorities,
                         transitively_consistent)
-from repro.data.entities import make_session_pairsets
 
 
 @st.composite
@@ -152,23 +151,23 @@ def test_host_gains_match_device_gains(world):
 # adaptive labelers, end to end
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("labeler", ["sequential", "parallel", "jax"])
-def test_adaptive_labelers_label_correctly(labeler):
+def test_adaptive_labelers_label_correctly(session_pairsets, labeler):
     for seed in (0, 1):
-        ps = make_session_pairsets(1, seed=seed, n_objects=(14, 20),
-                                   n_pairs=(30, 60), n_entities=3)[0]
+        ps = session_pairsets(1, seed=seed, n_objects=(14, 20),
+                              n_pairs=(30, 60), n_entities=3)[0]
         r = crowdsourced_join(ps, PerfectCrowd(), order="adaptive",
                               labeler=labeler)
         np.testing.assert_array_equal(r.labels, ps.truth)
         assert 0 < r.n_crowdsourced <= len(ps)
 
 
-def test_adaptive_host_parallel_matches_engine():
+def test_adaptive_host_parallel_matches_engine(session_pairsets):
     """The host adaptive parallel oracle and the engine adaptive path agree
     on labels and crowdsourced counts (seeded; the gain formula is bitwise
     identical on both sides)."""
     for seed in (2, 3, 4):
-        ps = make_session_pairsets(1, seed=seed, n_objects=(14, 20),
-                                   n_pairs=(30, 60), n_entities=3)[0]
+        ps = session_pairsets(1, seed=seed, n_objects=(14, 20),
+                              n_pairs=(30, 60), n_entities=3)[0]
         host = crowdsourced_join(ps, PerfectCrowd(), order="adaptive",
                                  labeler="parallel")
         eng = crowdsourced_join(ps, PerfectCrowd(), order="adaptive",
@@ -216,25 +215,21 @@ def test_truth_requiring_orders_raise_value_error():
         get_order(ps, "worst")
 
 
-def test_adaptive_initial_order_is_expected():
-    ps = make_session_pairsets(1, seed=9)[0]
+def test_adaptive_initial_order_is_expected(session_pairsets):
+    ps = session_pairsets(1, seed=9)[0]
     np.testing.assert_array_equal(get_order(ps, "adaptive"),
                                   get_order(ps, "expected"))
 
 
 # ---------------------------------------------------------------------------
-# budget-aware scheduling
+# budget-aware scheduling (sessions from the shared conftest builder)
 # ---------------------------------------------------------------------------
-def _budget_sessions(seed=11):
-    return make_session_pairsets(3, seed=seed, n_objects=(12, 24),
-                                 n_pairs=(20, 60))
-
-
 @pytest.mark.parametrize("async_mode", [False, True], ids=["barrier", "async"])
-def test_budget_capped_session_stops_within_budget(async_mode):
+def test_budget_capped_session_stops_within_budget(session_pairsets,
+                                                   async_mode):
     from repro.serve.join_service import JoinService
 
-    pairsets = _budget_sessions()
+    pairsets = session_pairsets()
     svc = JoinService(lanes=2, async_mode=async_mode)
     rids = [svc.submit(ps, PerfectCrowd(), budget_cents=8.0,
                        cost_per_assignment=2.0) for ps in pairsets]
@@ -248,7 +243,7 @@ def test_budget_capped_session_stops_within_budget(async_mode):
         assert transitively_consistent(ps, r.labels)
 
 
-def test_requery_escalations_respect_budget():
+def test_requery_escalations_respect_budget(conflicting_pairsets):
     """A budgeted session under conflict_policy='requery' must not overspend
     on escalations: unaffordable requeries exhaust (the graph outvotes the
     crowd) instead of being bought (DESIGN.md §10)."""
@@ -257,9 +252,7 @@ def test_requery_escalations_respect_budget():
 
     for seed in (2, 5):
         for budget in (20.0, 60.0, 174.0, 216.0):
-            pairsets = make_session_pairsets(
-                2, seed=seed, n_objects=(25, 35), n_pairs=(120, 200),
-                n_entities=4, likelihood=(0.7, 0.4, 0.25))
+            pairsets = conflicting_pairsets(2, seed=seed)
             svc = JoinService(lanes=2, conflict_policy="requery")
             rids = [svc.submit(ps, NoisyCrowd(error_rate=0.45,
                                               qualification=False,
@@ -273,10 +266,10 @@ def test_requery_escalations_respect_budget():
                 assert transitively_consistent(ps, res[rid].labels)
 
 
-def test_unlimited_budget_matches_unbudgeted_run():
+def test_unlimited_budget_matches_unbudgeted_run(session_pairsets):
     from repro.serve.join_service import JoinService
 
-    pairsets = _budget_sessions()
+    pairsets = session_pairsets()
     svc = JoinService(lanes=2)
     rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
     base = svc.run()
@@ -290,10 +283,10 @@ def test_unlimited_budget_matches_unbudgeted_run():
         assert capped[b].n_spent_cents == 2.0 * capped[b].n_crowdsourced
 
 
-def test_slots_per_round_caps_round_sizes_globally():
+def test_slots_per_round_caps_round_sizes_globally(session_pairsets):
     from repro.serve.join_service import JoinService
 
-    pairsets = _budget_sessions(seed=13)
+    pairsets = session_pairsets(seed=13)
     svc = JoinService(lanes=3, slots_per_round=4)
     rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
     res = svc.run()
@@ -303,10 +296,10 @@ def test_slots_per_round_caps_round_sizes_globally():
     assert all(s <= 4 for rid in rids for s in res[rid].round_sizes)
 
 
-def test_adaptive_service_matches_adaptive_engine():
+def test_adaptive_service_matches_adaptive_engine(session_pairsets):
     from repro.serve.join_service import JoinService
 
-    pairsets = _budget_sessions(seed=17)
+    pairsets = session_pairsets(seed=17)
     svc = JoinService(lanes=2, order="adaptive")
     rids = [svc.submit(ps, PerfectCrowd()) for ps in pairsets]
     res = svc.run()
@@ -318,13 +311,13 @@ def test_adaptive_service_matches_adaptive_engine():
         assert res[rid].round_sizes == ref.batch_sizes
 
 
-def test_service_rejects_unknown_order():
+def test_service_rejects_unknown_order(session_pairsets):
     from repro.serve.join_service import JoinService
 
     with pytest.raises(ValueError, match="valid orders"):
         JoinService(order="nope")
     svc = JoinService()
-    ps = _budget_sessions()[0]
+    ps = session_pairsets()[0]
     with pytest.raises(ValueError, match="valid orders"):
         svc.submit(ps, PerfectCrowd(), order="nope")
     with pytest.raises(ValueError, match="slots_per_round"):
