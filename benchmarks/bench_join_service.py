@@ -89,12 +89,15 @@ def _bench_human_phase(out: list, payload: dict) -> None:
     secs = time.perf_counter() - t0
     n_pairs = sum(len(res[r].labels) for r in rids)
     n_crowd = sum(res[r].n_crowdsourced for r in rids)
+    cost_cents = sum(res[r].cost_cents for r in rids)
     sessions_per_s = len(cases) / secs
     payload["human"] = {
         "sessions": len(cases), "lanes": 3, "secs": secs,
         "sessions_per_s": sessions_per_s, "pairs_labeled": n_pairs,
         "crowdsourced": n_crowd,
         "saved_frac": 1.0 - n_crowd / max(n_pairs, 1),
+        "cost_cents": cost_cents,
+        "cents_per_resolved_pair": cost_cents / max(n_pairs, 1),
     }
     out.append(row(
         f"join_service/sessions_{len(cases)}x3lanes", secs * 1e6 / len(cases),

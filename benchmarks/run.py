@@ -1,29 +1,86 @@
 """Benchmark harness — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows.
+
+``--snapshot[=PATH]`` additionally writes a persisted perf snapshot
+(default ``BENCH_join.json``, committed per PR so the trajectory of
+candidate cells/s, rounds/s, and crowd cents per resolved pair is tracked
+in-repo instead of evaporating with each CI run): the raw ``# JSON``
+payloads each bench emits, plus a small derived ``trajectory`` block with
+the headline numbers.
+"""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
 
+def _trajectory(payloads: dict) -> dict:
+    """Headline numbers distilled from the per-bench payloads — the fields
+    the ROADMAP trajectory tracks across PRs.  Tolerant of missing benches
+    (a partial ``--snapshot bench_blocking`` run snapshots what it ran)."""
+    traj: dict = {}
+    blocking = payloads.get("bench_blocking", {})
+    if "blocked" in blocking:
+        traj["candidate_cells_per_s"] = \
+            blocking["blocked"]["candidate_cells_per_s"]
+        traj["blocked_cells_saved_frac"] = \
+            blocking["blocked"]["cells_saved_frac"]
+        traj["blocker_recall"] = blocking["recall"]["recall"]
+    svc = payloads.get("bench_join_service", {})
+    if "machine" in svc:
+        traj["dense_pairs_scored_per_s"] = svc["machine"]["pairs_scored_per_s"]
+    if "engine_rounds" in svc:
+        ms = svc["engine_rounds"]["mean_ms_per_round"]["incremental"]
+        traj["rounds_per_s"] = 1000.0 / ms if ms else None
+    if "human" in svc:
+        traj["crowd_cents_per_resolved_pair"] = \
+            svc["human"]["cents_per_resolved_pair"]
+        traj["crowd_saved_frac"] = svc["human"]["saved_frac"]
+    return traj
+
+
 def main() -> None:
-    from . import (bench_join_service, bench_streaming, boruvka_parity,
-                   fig11_clusters, fig12_transitive, fig13_orders,
-                   fig14_parallel, fig16_optimizations, noise_sweep,
-                   table1_latency, table2_quality)
+    from . import (bench_blocking, bench_join_service, bench_streaming,
+                   boruvka_parity, fig11_clusters, fig12_transitive,
+                   fig13_orders, fig14_parallel, fig16_optimizations,
+                   noise_sweep, table1_latency, table2_quality)
     mods = [fig11_clusters, fig12_transitive, fig13_orders, fig14_parallel,
             fig16_optimizations, table1_latency, table2_quality,
-            boruvka_parity, bench_join_service, bench_streaming, noise_sweep]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+            boruvka_parity, bench_join_service, bench_streaming,
+            bench_blocking, noise_sweep]
+    args = sys.argv[1:]
+    snapshot_path = None
+    for arg in list(args):
+        if arg == "--snapshot" or arg.startswith("--snapshot="):
+            snapshot_path = (arg.split("=", 1)[1] if "=" in arg
+                             else "BENCH_join.json")
+            args.remove(arg)
+    only = args[0] if args else None
     print("name,us_per_call,derived")
+    payloads: dict = {}
     t0 = time.time()
     for m in mods:
         name = m.__name__.split(".")[-1]
         if only and only not in name:
             continue
         for r in m.run():
+            if r.startswith("# JSON "):
+                payloads.update(json.loads(r[len("# JSON "):]))
             print(r, flush=True)
     print(f"# total {time.time()-t0:.1f}s", flush=True)
+    if snapshot_path is not None:
+        snap = {
+            "config": {"tiny": os.environ.get("BENCH_JOIN_TINY", "") not in
+                       ("", "0")},
+            "trajectory": _trajectory(payloads),
+            "benches": payloads,
+        }
+        with open(snapshot_path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# snapshot written to {snapshot_path}", flush=True)
 
 
 if __name__ == "__main__":

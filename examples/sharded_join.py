@@ -48,6 +48,23 @@ for rid, tag in ((r1, "tau=0.55 perfect"), (r2, "tau=0.70 noisy  ")):
           f"{r.n_crowdsourced} crowdsourced + {r.n_deduced} deduced "
           f"in {r.n_rounds} rounds — {r.quality.row()}")
 
+# -- blocked machine phase (DESIGN.md §12) ----------------------------------
+# LSH buckets in front of the scorer: only colliding buckets reach the
+# fused similarity/threshold/compaction kernel, so the dense 300x280 grid
+# is never scored (or materialized).  The config is sized for a recall
+# floor at the threshold boundary; surviving pairs score bitwise-equal to
+# the dense path, so the join result is the same minus blocker misses.
+from repro.kernels.pair_scores.blocking import BlockingConfig
+
+cfg = BlockingConfig.for_recall(0.95, threshold=0.7, n_bits=5)
+svc_b = JoinService(lanes=1)
+rb = svc_b.submit_embeddings(emb_a, emb_b, 0.7, mesh, crowd=PerfectCrowd(),
+                             truth_fn=truth_fn, blocking=cfg)
+r = svc_b.run()[rb]
+print(f"blocked tau=0.70 ({cfg.n_tables} tables): {len(r.labels)} "
+      f"candidates, {r.n_crowdsourced} crowdsourced + {r.n_deduced} deduced "
+      f"— {r.quality.row()}")
+
 # -- async ID/NF vs round barrier on a simulated crowd platform -------------
 # Same workload, same latency model; the event-driven gateway discipline
 # (fold answers as they land, re-select on non-matching returns, steer

@@ -55,6 +55,28 @@ print(f"streaming: {len(res.labels)} pairs, "
       f"precision={res.quality.precision:.2f} "
       f"recall={res.quality.recall:.2f}")
 
+# -- streaming + blocking (DESIGN.md §12) -----------------------------------
+# The same live session, but the machine phase rides LSH buckets: each
+# arrival hashes into the existing buckets (signatures are deterministic
+# in the config seed) and only the tiles its buckets touch reach the
+# fused kernel — incremental in rows AND sub-dense per epoch.
+from repro.kernels.pair_scores.blocking import BlockingConfig
+
+cfg = BlockingConfig.for_recall(0.95, threshold=0.75, n_bits=5)
+svc_b = JoinService(lanes=1)
+all_a, all_b = list(a_ids), list(b_ids)
+rid_b = svc_b.submit_embeddings(emb_a, emb_b, 0.75, mesh,
+                                crowd=PerfectCrowd(), truth_fn=truth_fn,
+                                streaming=True, blocking=cfg)
+for (na, ea), (nb, eb) in epochs:
+    all_a += na
+    all_b += nb
+    svc_b.append_embeddings(rid_b, ea, eb)  # only touched buckets rescore
+res_b = svc_b.run()[rid_b]
+print(f"streaming+blocking ({cfg.n_tables} tables): {len(res_b.labels)} "
+      f"pairs, crowdsourced={res_b.n_crowdsourced}, "
+      f"precision={res_b.quality.precision:.2f}")
+
 # -- the alternative: full resubmission after every epoch -------------------
 resubmit_crowd = 0
 ca, cb = emb_a, emb_b

@@ -1,4 +1,6 @@
-"""Pallas TPU kernel: blocked all-pairs similarity + fused thresholding.
+"""Pallas TPU kernels: blocked all-pairs similarity + fused thresholding,
+and the fused similarity -> threshold -> on-chip compaction kernel behind
+the blocked candidate generator (DESIGN.md §12).
 
 The machine phase of the paper's pipeline scores N x M candidate pairs
 (496K for Cora; O(N^2) in general).  On TPU this is a classic MXU tiling
@@ -7,9 +9,17 @@ problem: stream (bn x D) / (bm x D) embedding tiles through VMEM, one
 candidate structure (scores zeroed below tau + per-row counts) comes out of
 the kernel without a second pass over HBM.
 
-Grid: (N/bn, M/bm); the per-row count accumulator revisits its (bn, 1) block
-across the j axis (TPU grid execution is sequential, so the accumulation is
-well-defined; j is the minor grid dim).
+``pair_scores`` keeps the dense layout (grid (N/bn, M/bm); the per-row
+count accumulator revisits its (bn, 1) block across the sequential minor
+grid axis).  ``pair_scores_compact`` is the scale-unlock variant: it walks
+a *list* of gathered bucket tiles (grid (T,)), and instead of emitting the
+(bn, bm) score block it compacts the above-threshold triples
+(row, col, score) into a fixed-capacity buffer **inside the kernel** — a
+cursor in SMEM scratch advances by each tile's candidate count, so the
+dense score matrix never exists in any memory space.  Overflow is a
+counted contract, not a crash: writes past ``capacity`` land in a
+one-tile slack region and the true total comes back for the caller's
+``suggested_capacity`` arithmetic.
 """
 from __future__ import annotations
 
@@ -18,6 +28,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed from TPUCompilerParams after jax 0.4.x
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
 
 DEFAULT_BN = 256
 DEFAULT_BM = 256
@@ -72,3 +87,104 @@ def pair_scores(a: jax.Array, b: jax.Array, threshold: float,
         ],
         interpret=interpret,
     )(a, b)
+
+
+def _make_compact_kernel(threshold: float, capacity: int, bn: int, bm: int):
+    W = bn * bm
+
+    def kernel(a_ref, b_ref, ida_ref, idb_ref,
+               rows_ref, cols_ref, scr_ref, n_ref, cur):
+        t = pl.program_id(0)
+
+        @pl.when(t == 0)
+        def _init():
+            cur[0] = 0
+            rows_ref[...] = jnp.full_like(rows_ref, -1)
+            cols_ref[...] = jnp.full_like(cols_ref, -1)
+            scr_ref[...] = jnp.zeros_like(scr_ref)
+
+        a = a_ref[...].astype(jnp.float32)              # (bn, D)
+        b = b_ref[...].astype(jnp.float32)              # (bm, D)
+        s = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        ra = ida_ref[...][:, 0]                         # (bn,) global rows
+        cb = idb_ref[...][:, 0]                         # (bm,) global cols
+        # id -1 marks tile padding; padded gather rows are also zero vectors,
+        # so with threshold > 0 the mask is belt-and-braces
+        mask = (s >= threshold) & (ra[:, None] >= 0) & (cb[None, :] >= 0)
+        flat_m = mask.reshape(-1)
+        rows = jnp.broadcast_to(ra[:, None], (bn, bm)).reshape(-1)
+        cols = jnp.broadcast_to(cb[None, :], (bn, bm)).reshape(-1)
+        # stable candidate-first compaction of this tile
+        order = jnp.argsort(~flat_m, stable=True)
+        got = flat_m[order]
+        cnt = flat_m.sum().astype(jnp.int32)
+        # the cursor is where this tile's candidates start; each tile writes
+        # a full W-window (its invalid tail marked row -1) that the next
+        # tile overwrites from cursor + cnt, so [0, cursor) always holds
+        # exactly the compacted candidates.  Once the cursor passes
+        # ``capacity`` the clamp parks further writes in the slack tile.
+        base = jnp.minimum(cur[0], capacity)
+        rows_ref[pl.ds(base, W), :] = jnp.where(got, rows[order], -1)[:, None]
+        cols_ref[pl.ds(base, W), :] = jnp.where(got, cols[order], -1)[:, None]
+        scr_ref[pl.ds(base, W), :] = jnp.where(
+            got, s.reshape(-1)[order], 0.0)[:, None]
+        cur[0] = cur[0] + cnt
+        n_ref[0, 0] = cur[0]
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("threshold", "capacity", "bn", "bm",
+                                    "interpret"))
+def pair_scores_compact(a_g: jax.Array, b_g: jax.Array,
+                        ida: jax.Array, idb: jax.Array,
+                        threshold: float, capacity: int,
+                        bn: int, bm: int, interpret: bool = False):
+    """Fused similarity + threshold + on-chip candidate compaction over
+    gathered bucket tiles (DESIGN.md §12).
+
+    a_g: (T*bn, D) / b_g: (T*bm, D) — tile-gathered L2-normalized
+    embeddings (tile t's rows live at [t*bn, (t+1)*bn)); padding rows are
+    zero vectors.  ida: (T*bn, 1) / idb: (T*bm, 1) int32 global row/col
+    ids, -1 on padding.  Requires ``threshold > 0`` so zero padding can
+    never score as a candidate.
+
+    Returns (rows (capacity + bn*bm, 1) i32, cols ditto, scores ditto f32,
+    n_total (1, 1) i32).  Entries [0, min(n_total, capacity)) are the
+    compacted candidates (tail marked -1); n_total is the true candidate
+    count, so ``n_total - capacity`` (when positive) is the overflow the
+    caller must surface.  The trailing bn*bm slack rows are scratch for
+    clamped overflow writes — never candidate data.
+    """
+    T = a_g.shape[0] // bn
+    D = a_g.shape[1]
+    W = bn * bm
+    C = int(capacity)
+    return pl.pallas_call(
+        _make_compact_kernel(float(threshold), C, bn, bm),
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((bn, D), lambda t: (t, 0)),
+            pl.BlockSpec((bm, D), lambda t: (t, 0)),
+            pl.BlockSpec((bn, 1), lambda t: (t, 0)),
+            pl.BlockSpec((bm, 1), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C + W, 1), lambda t: (0, 0)),
+            pl.BlockSpec((C + W, 1), lambda t: (0, 0)),
+            pl.BlockSpec((C + W, 1), lambda t: (0, 0)),
+            pl.BlockSpec((1, 1), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C + W, 1), jnp.int32),
+            jax.ShapeDtypeStruct((C + W, 1), jnp.int32),
+            jax.ShapeDtypeStruct((C + W, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(a_g, b_g, ida, idb)

@@ -1,7 +1,10 @@
-"""Pure-jnp oracle for the pair-similarity kernel."""
+"""Pure-jnp oracles for the pair-similarity kernels: the dense score matrix
+(``pair_scores_ref``) and the dense candidate list (``candidates_ref``) the
+blocked+fused path is property-tested against (DESIGN.md §12)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def pair_scores_ref(a: jnp.ndarray, b: jnp.ndarray, threshold: float):
@@ -13,3 +16,17 @@ def pair_scores_ref(a: jnp.ndarray, b: jnp.ndarray, threshold: float):
     s = jnp.einsum("nd,md->nm", a.astype(jnp.float32), b.astype(jnp.float32))
     mask = s >= threshold
     return jnp.where(mask, s, 0.0), mask.sum(axis=1).astype(jnp.int32)
+
+
+def candidates_ref(a: jnp.ndarray, b: jnp.ndarray, threshold: float):
+    """Dense candidate oracle: every (i, j) with similarity >= threshold,
+    in row-major order.  a/b must already be L2-normalized — the blocked
+    parity tests feed both paths the same normalized arrays so surviving
+    pairs can be compared bitwise.
+
+    Returns (rows (C,) i32, cols (C,) i32, scores (C,) f32)."""
+    s = np.asarray(jnp.einsum("nd,md->nm", a.astype(jnp.float32),
+                              b.astype(jnp.float32)))
+    rows, cols = np.nonzero(s >= threshold)
+    return (rows.astype(np.int32), cols.astype(np.int32),
+            s[rows, cols].astype(np.float32))

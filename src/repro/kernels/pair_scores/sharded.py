@@ -239,11 +239,18 @@ class StreamingCandidateIndex:
     it against ``full_rescore_pairs`` (what resubmitting from scratch every
     epoch would have scored) to show the incremental driver doing strictly
     less pair-score work.
+
+    With a ``blocking`` config (DESIGN.md §12) the index additionally rides
+    the LSH bucket structure: arrivals hash into the *existing* buckets
+    (signatures are deterministic in the seed, so an arrival's codes match
+    the codes the corpus was bucketed with), and only tiles from buckets
+    the arrival touched reach the fused compaction kernel — the per-epoch
+    work drops from the dense dN x M block to the colliding cells.
     """
 
     def __init__(self, threshold: float, mesh: Mesh,
                  capacity: Optional[int] = None, normalize: bool = True,
-                 impl: str = "auto"):
+                 impl: str = "auto", blocking=None):
         if threshold <= 0.0:
             raise ValueError("StreamingCandidateIndex requires threshold > 0 "
                              "(padding rows score exactly 0)")
@@ -252,8 +259,13 @@ class StreamingCandidateIndex:
         self.capacity = capacity
         self.normalize = normalize
         self.impl = impl
+        self.blocking = blocking
         self._a = np.zeros((0, 0), np.float32)  # cached normalized corpus
         self._b = np.zeros((0, 0), np.float32)
+        # cached (n_tables, N) signature codes of the corpus (blocking only)
+        n_tables = blocking.n_tables if blocking is not None else 0
+        self._codes_a = np.zeros((n_tables, 0), np.int64)
+        self._codes_b = np.zeros((n_tables, 0), np.int64)
         self.pairs_scored = 0        # grid cells the incremental path scored
         self.full_rescore_pairs = 0  # cells full per-epoch re-runs would score
         self._undo = None            # pre-append snapshot (rollback_append)
@@ -291,19 +303,84 @@ class StreamingCandidateIndex:
         or every later epoch would score against (and skip) them."""
         if self._undo is None:
             raise RuntimeError("no append to roll back")
-        (self._a, self._b, self.pairs_scored,
-         self.full_rescore_pairs) = self._undo
+        (self._a, self._b, self._codes_a, self._codes_b,
+         self.pairs_scored, self.full_rescore_pairs) = self._undo
         self._undo = None
+
+    def _append_blocked(self, na: Optional[np.ndarray],
+                        nb: Optional[np.ndarray]):
+        """Blocked epoch: hash arrivals into the existing buckets and score
+        only the colliding tiles.  Same cell coverage as the dense path —
+        ``new_a x b_full`` then ``a_old x new_b`` — restricted per group to
+        bucket collisions, so the union over epochs equals one batch
+        :func:`blocking.blocked_candidates` call over the final corpora."""
+        from .blocking import (BlockedCandidates, block_pairs,
+                               score_block_pairs, signatures)
+
+        cfg = self.blocking
+        n0, m0 = self.n_a, self.n_b
+        dn = len(na) if na is not None else 0
+        dm = len(nb) if nb is not None else 0
+        ca_new = (signatures(na, cfg) if dn
+                  else np.zeros((cfg.n_tables, 0), np.int64))
+        cb_new = (signatures(nb, cfg) if dm
+                  else np.zeros((cfg.n_tables, 0), np.int64))
+        a_full = (self._a if not dn
+                  else (na if n0 == 0 else np.concatenate([self._a, na])))
+        b_full = (self._b if not dm
+                  else (nb if m0 == 0 else np.concatenate([self._b, nb])))
+        codes_a = np.concatenate([self._codes_a, ca_new], axis=1)
+        codes_b = np.concatenate([self._codes_b, cb_new], axis=1)
+        parts = []
+        if dn and (m0 + dm):
+            ta, tb = block_pairs(codes_a, np.arange(n0, n0 + dn),
+                                 codes_b, np.arange(m0 + dm),
+                                 cfg.bn, cfg.bm)
+            parts.append(score_block_pairs(
+                a_full, b_full, ta, tb, self.threshold, cfg,
+                capacity=self.capacity, impl=self.impl))
+        if dm and n0:
+            ta, tb = block_pairs(codes_a, np.arange(n0),
+                                 codes_b, np.arange(m0, m0 + dm),
+                                 cfg.bn, cfg.bm)
+            parts.append(score_block_pairs(
+                a_full, b_full, ta, tb, self.threshold, cfg,
+                capacity=self.capacity, impl=self.impl))
+        self._a, self._b = a_full, b_full
+        self._codes_a, self._codes_b = codes_a, codes_b
+        self.pairs_scored += sum(p.cells_scored for p in parts)
+        self.full_rescore_pairs += self.n_a * self.n_b
+        # the two groups are row-disjoint (group 1 rows >= n0, group 2
+        # rows < n0) and each call dedups cross-table re-finds, so a plain
+        # concat is already duplicate-free
+        return BlockedCandidates(
+            rows=np.concatenate([p.rows for p in parts])
+            if parts else np.zeros(0, np.int32),
+            cols=np.concatenate([p.cols for p in parts])
+            if parts else np.zeros(0, np.int32),
+            scores=np.concatenate([p.scores for p in parts])
+            if parts else np.zeros(0, np.float32),
+            n_dropped=sum(p.n_dropped for p in parts),
+            capacity=(max(p.capacity for p in parts) if parts
+                      else (self.capacity or 0)),
+            cells_scored=sum(p.cells_scored for p in parts),
+            padded_cells=sum(p.padded_cells for p in parts),
+            dense_cells=dn * (m0 + dm) + n0 * dm,
+            n_tiles=sum(p.n_tiles for p in parts),
+            n_duplicates=sum(p.n_duplicates for p in parts),
+        )
 
     def append(self, new_a: Optional[jax.Array] = None,
                new_b: Optional[jax.Array] = None) -> ShardedCandidates:
         """Ingest new rows and return ONLY the new candidate pairs — every
         (row, col) with at least one appended endpoint that scores at or
         above the threshold, with global indices into the grown corpora."""
-        self._undo = (self._a, self._b, self.pairs_scored,
-                      self.full_rescore_pairs)
+        self._undo = (self._a, self._b, self._codes_a, self._codes_b,
+                      self.pairs_scored, self.full_rescore_pairs)
         na = self._norm(new_a) if new_a is not None else None
         nb = self._norm(new_b) if new_b is not None else None
+        if self.blocking is not None:
+            return self._append_blocked(na, nb)
         n0, m0 = self.n_a, self.n_b
         blocks = []
         # new_a against the full post-append b corpus (old + new cols), then

@@ -333,7 +333,8 @@ class JoinService:
                           total_true_matches: Optional[int] = None,
                           budget_cents: Optional[float] = None,
                           cost_per_assignment: Optional[float] = None,
-                          streaming: bool = False) -> int:
+                          streaming: bool = False,
+                          blocking=None) -> int:
         """Machine phase + enqueue: score (emb_a x emb_b) on the mesh with
         the sharded kernel driver, keep pairs above ``threshold`` (cosine,
         mapped to [0, 1] likelihood), and queue the session.
@@ -354,14 +355,35 @@ class JoinService:
         :meth:`append_embeddings` calls score only the new-vs-corpus and
         new-vs-new blocks (DESIGN.md §11); ``truth_fn`` is retained and must
         then accept global row/col indices into the grown corpora.
+
+        ``blocking`` (a :class:`BlockingConfig`, DESIGN.md §12) puts the
+        LSH blocking stage in front of the scorer: only bucket-colliding
+        pairs are scored, through the fused compaction kernel — the blocked
+        path runs on the local device (``mesh`` is ignored), and with
+        ``streaming=True`` later arrivals hash into the existing buckets so
+        only touched buckets rescore.  Blocking trades recall at the
+        threshold boundary for scored cells; size the config with
+        ``BlockingConfig.for_recall``.
         """
+        from repro.kernels.pair_scores.blocking import blocked_candidates
         from repro.kernels.pair_scores.sharded import (
             StreamingCandidateIndex, sharded_candidates)
 
         if streaming:
             index = StreamingCandidateIndex(threshold, mesh,
-                                            capacity=capacity, impl=impl)
+                                            capacity=capacity, impl=impl,
+                                            blocking=blocking)
             cand = index.append(emb_a, emb_b)
+            if cand.n_dropped:
+                # reject atomically BEFORE surfacing the overflow: a raise
+                # that left the partially-compacted epoch in the index would
+                # make a retry at suggested_capacity score the corpus as
+                # "already seen" and return no candidates at all
+                index.rollback_append()
+        elif blocking is not None:
+            cand = blocked_candidates(emb_a, emb_b, threshold,
+                                      config=blocking, capacity=capacity,
+                                      impl=impl)
         else:
             cand = sharded_candidates(emb_a, emb_b, threshold, mesh,
                                       capacity=capacity, impl=impl)
