@@ -198,37 +198,142 @@ def _run_from_scratch_rounds(sessions, truths):
     return labels, ms, dispatches
 
 
+def _run_per_lane_rounds(sessions, truths):
+    """The asynchronous-discipline engine loop (DESIGN.md §8): every lane
+    pays its own frontier + publish-mark + fold dispatches each round, plus
+    a host/device sync to read the frontier — the per-round cost the §13
+    fused engine removes."""
+    import jax.numpy as jnp
+
+    from repro.core import (UNKNOWN, engine_dispatches, make_session_state,
+                            session_fold_answers, session_frontier,
+                            session_mark_published)
+
+    states = [make_session_state(u, v, n) for u, v, n in sessions]
+    ms, dispatches = [], []
+    while True:
+        engine_dispatches.reset()
+        t0 = time.perf_counter()
+        busy = False
+        for b, st in enumerate(states):
+            p = len(truths[b])
+            if not (np.asarray(st.labels)[:p] == UNKNOWN).any():
+                continue
+            busy = True
+            frontier = np.asarray(session_frontier(st))
+            engine_dispatches.add()  # frontier-mask upload
+            st = session_mark_published(st, jnp.asarray(frontier))
+            updates = np.full(st.u.shape[0], UNKNOWN, np.int32)
+            idx = np.nonzero(frontier[:p])[0]
+            if len(idx):
+                updates[idx] = truths[b][idx]
+            engine_dispatches.add()  # updates upload
+            states[b], _ = session_fold_answers(st, jnp.asarray(updates))
+        if not busy:
+            break
+        ms.append((time.perf_counter() - t0) * 1e3)
+        dispatches.append(engine_dispatches.count)
+    engine_dispatches.reset()
+    return states, ms, dispatches
+
+
+def _run_fused_rounds(sessions, truths, k: int = 8):
+    """DESIGN.md §13: one cross-lane megabatch keeps every state resident
+    and advances up to ``k`` rounds per ``session_run_rounds_batch``
+    dispatch; the crowd's (order-independent) answers upload once."""
+    import jax.numpy as jnp
+
+    from repro.core import (UNKNOWN, engine_dispatches,
+                            make_session_state_batch, pack_sessions,
+                            session_run_rounds_batch)
+
+    U, V, labels0, valid, n_cap = pack_sessions(sessions)
+    state = make_session_state_batch(U, V, labels0, n_cap)
+    answers = np.full(labels0.shape, UNKNOWN, np.int32)
+    for b, t in enumerate(truths):
+        answers[b, :len(t)] = t
+    engine_dispatches.reset()
+    t0 = time.perf_counter()
+    engine_dispatches.add()  # answers upload
+    ans = jnp.asarray(answers)
+    rounds = np.zeros(len(sessions), np.int64)
+    while True:
+        state, _, _, rdone, _ = session_run_rounds_batch(state, ans, k)
+        rounds += np.asarray(rdone)
+        labels = np.asarray(state.labels)
+        if not (labels[valid] == UNKNOWN).any():
+            break
+    secs = time.perf_counter() - t0
+    d = engine_dispatches.count
+    engine_dispatches.reset()
+    return labels, secs, d, int(rounds.max())
+
+
 def _bench_engine_rounds(out: list, payload: dict) -> None:
     lanes = 16
     sessions, truths = _engine_sessions(lanes)
-    # warm both paths' jit caches on the same sessions (packed shapes are
+    # warm every path's jit caches on the same sessions (packed shapes are
     # data-dependent) so per-round ms is execution, not tracing
     _run_incremental_rounds(sessions, truths)
     _run_from_scratch_rounds(sessions, truths)
+    _run_per_lane_rounds(sessions, truths)
+    _run_fused_rounds(sessions, truths)
 
     lab_inc, ms_inc, d_inc = _run_incremental_rounds(sessions, truths)
     lab_fs, ms_fs, d_fs = _run_from_scratch_rounds(sessions, truths)
+    st_pl, ms_pl, d_pl = _run_per_lane_rounds(sessions, truths)
+    lab_fu, secs_fu, disp_fu, rounds_fu = _run_fused_rounds(sessions, truths)
     for b, (u, _, _) in enumerate(sessions):  # same math, same labels
         np.testing.assert_array_equal(lab_inc[b, :len(u)], lab_fs[b, :len(u)])
+        np.testing.assert_array_equal(lab_inc[b, :len(u)],
+                                      np.asarray(st_pl[b].labels)[:len(u)])
+        np.testing.assert_array_equal(lab_inc[b, :len(u)], lab_fu[b, :len(u)])
     inc_ms = float(np.mean(ms_inc))
     fs_ms = float(np.mean(ms_fs))
+    pl_ms = float(np.mean(ms_pl))
+    fu_ms = secs_fu * 1e3 / rounds_fu
     inc_d = float(np.mean(d_inc))
     fs_d = float(np.mean(d_fs))
+    pl_d = float(np.mean(d_pl))
+    fu_d = disp_fu / rounds_fu
     payload["engine_rounds"] = {
         "lanes": lanes,
-        "rounds": {"incremental": len(ms_inc), "from_scratch": len(ms_fs)},
-        "ms_per_round": {"incremental": ms_inc, "from_scratch": ms_fs},
-        "dispatches_per_round": {"incremental": d_inc, "from_scratch": d_fs},
-        "mean_ms_per_round": {"incremental": inc_ms, "from_scratch": fs_ms},
+        "rounds": {"incremental": len(ms_inc), "from_scratch": len(ms_fs),
+                   "per_lane": len(ms_pl), "fused": rounds_fu},
+        "ms_per_round": {"incremental": ms_inc, "from_scratch": ms_fs,
+                         "per_lane": ms_pl},
+        "dispatches_per_round": {"incremental": d_inc, "from_scratch": d_fs,
+                                 "per_lane": d_pl},
+        "mean_ms_per_round": {"incremental": inc_ms, "from_scratch": fs_ms,
+                              "per_lane": pl_ms, "fused": fu_ms},
         "mean_dispatches_per_round": {"incremental": inc_d,
-                                      "from_scratch": fs_d},
+                                      "from_scratch": fs_d,
+                                      "per_lane": pl_d,
+                                      "fused": fu_d},
         "fewer_dispatches": inc_d < fs_d,
+        # DESIGN.md §13 acceptance: the megabatch round engine amortizes to
+        # <1 dispatch/round (vs 3/group incremental, 3/lane async) and its
+        # rounds/sec is measured against both existing per-round paths
+        "fused": {
+            "rounds": rounds_fu,
+            "mean_ms_per_round": fu_ms,
+            "rounds_per_s": 1000.0 / fu_ms,
+            "dispatches_per_round": fu_d,
+            "sub_one_dispatch_per_round": fu_d < 1.0,
+            "speedup_vs_incremental": inc_ms / fu_ms,
+            "speedup_vs_per_lane": pl_ms / fu_ms,
+        },
     }
     out.append(row(
         f"join_service/engine_rounds_{lanes}lanes", inc_ms * 1e3,
         f"inc_ms={inc_ms:.1f} fs_ms={fs_ms:.1f} "
         f"inc_dispatch={inc_d:.1f} fs_dispatch={fs_d:.1f} "
         f"fewer_dispatches={inc_d < fs_d}"))
+    out.append(row(
+        f"join_service/engine_rounds_fused_{lanes}lanes", fu_ms * 1e3,
+        f"fused_ms={fu_ms:.2f} fused_dispatch={fu_d:.2f} "
+        f"speedup_vs_per_lane={pl_ms / fu_ms:.1f}x "
+        f"speedup_vs_incremental={inc_ms / fu_ms:.1f}x"))
 
 
 def _bench_async_gateway(out: list, payload: dict) -> None:
@@ -373,12 +478,14 @@ def _bench_ordering(out: list, payload: dict) -> None:
     state = make_session_state_batch(U, V, labels0, n_cap)
     priors = jnp.asarray(np.broadcast_to(cand.likelihood, U.shape))
     enable = np.ones(lanes, bool)
-    session_refresh_priorities_batch(state, priors, enable)  # warm the jit
+    # refresh donates its SessionState argument (§13 donation discipline), so
+    # the old buffers die with each call — thread the returned state through
+    state = session_refresh_priorities_batch(state, priors, enable)  # warm
     reps = 10
     t0 = time.perf_counter()
     for _ in range(reps):
-        st = session_refresh_priorities_batch(state, priors, enable)
-    jax.block_until_ready(st.priority)
+        state = session_refresh_priorities_batch(state, priors, enable)
+    jax.block_until_ready(state.priority)
     refresh_ms = (time.perf_counter() - t0) * 1e3 / reps
     out.append(row("join_service/priority_refresh", refresh_ms * 1e3,
                    f"lanes={lanes} pairs={len(cand)} "

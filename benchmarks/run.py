@@ -34,6 +34,11 @@ def _trajectory(payloads: dict) -> dict:
     if "engine_rounds" in svc:
         ms = svc["engine_rounds"]["mean_ms_per_round"]["incremental"]
         traj["rounds_per_s"] = 1000.0 / ms if ms else None
+        fused = svc["engine_rounds"].get("fused")
+        if fused:  # §13 on-device round engine headline numbers
+            traj["fused_rounds_per_s"] = fused["rounds_per_s"]
+            traj["fused_dispatches_per_round"] = fused["dispatches_per_round"]
+            traj["fused_speedup_vs_per_lane"] = fused["speedup_vs_per_lane"]
     if "human" in svc:
         traj["crowd_cents_per_resolved_pair"] = \
             svc["human"]["cents_per_resolved_pair"]
@@ -71,16 +76,30 @@ def main() -> None:
             print(r, flush=True)
     print(f"# total {time.time()-t0:.1f}s", flush=True)
     if snapshot_path is not None:
-        snap = {
-            "config": {"tiny": os.environ.get("BENCH_JOIN_TINY", "") not in
-                       ("", "0")},
+        config = {"tiny": os.environ.get("BENCH_JOIN_TINY", "") not in
+                  ("", "0")}
+
+        def _write(path: str, snap: dict) -> None:
+            with open(path, "w") as f:
+                json.dump(snap, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"# snapshot written to {path}", flush=True)
+
+        _write(snapshot_path, {
+            "config": config,
             "trajectory": _trajectory(payloads),
             "benches": payloads,
-        }
-        with open(snapshot_path, "w") as f:
-            json.dump(snap, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"# snapshot written to {snapshot_path}", flush=True)
+        })
+        # per-subsystem snapshots ride along in the same directory so the
+        # streaming and blocking trajectories are tracked in-repo too
+        outdir = os.path.dirname(snapshot_path)
+        for bench, fname in (("bench_streaming", "BENCH_streaming.json"),
+                             ("bench_blocking", "BENCH_blocking.json")):
+            if bench in payloads:
+                _write(os.path.join(outdir, fname) if outdir else fname, {
+                    "config": config,
+                    "benches": {bench: payloads[bench]},
+                })
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ from .cluster_graph import ClusterGraph, MATCH, NON_MATCH
 from .crowd import (CostModel, Crowd, CrowdAnswer, CrowdGateway, CrowdTicket,
                     LatencyModel, NoisyCrowd, PerfectCrowd)
 from .deduce import deduce_bruteforce
-from .jax_graph import (NEG, POS, UNKNOWN, SessionState, boruvka_frontier,
+from .jax_graph import (NEG, POS, ROUNDS_CONFLICT, ROUNDS_DONE, ROUNDS_EMPTY,
+                        ROUNDS_RUNNING, UNKNOWN, SessionState,
+                        boruvka_frontier,
                         boruvka_frontier_batch, connected_components,
                         connected_components_batch, deduce_batch,
                         deduce_sessions, engine_dispatches,
@@ -21,7 +23,8 @@ from .jax_graph import (NEG, POS, UNKNOWN, SessionState, boruvka_frontier,
                         session_from_labels, session_frontier,
                         session_frontier_batch, session_grow,
                         session_grow_batch, session_mark_published,
-                        session_mark_published_batch, session_trust_graph,
+                        session_mark_published_batch, session_run_rounds,
+                        session_run_rounds_batch, session_trust_graph,
                         session_trust_graph_batch)
 from .join import JoinResult, crowdsourced_join
 from .labeling import (LabelingResult, label_all_crowdsourced,
@@ -68,6 +71,8 @@ __all__ = [
     "session_fold_answers", "session_fold_answers_batch",
     "session_mark_published", "session_mark_published_batch",
     "session_trust_graph", "session_trust_graph_batch",
+    "session_run_rounds", "session_run_rounds_batch",
+    "ROUNDS_RUNNING", "ROUNDS_DONE", "ROUNDS_EMPTY", "ROUNDS_CONFLICT",
     "session_grow", "session_grow_batch",
     "session_append_pairs", "session_append_pairs_batch",
     "pair_key_bits", "pair_keys_fit", "next_pow2", "engine_dispatches",

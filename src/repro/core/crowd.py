@@ -53,6 +53,17 @@ class Crowd:
         lab = self.ask(pairs, i)
         return lab, (POS if lab == MATCH else NEG,)
 
+    def precomputed_answers(self, pairs: PairSet) -> Optional[np.ndarray]:
+        """Every pair's answer up front (engine encoding), or ``None``.
+
+        Non-None only when answers are independent of the ask order — the
+        contract the on-device round engine (DESIGN.md §13) needs to fold k
+        rounds without surfacing each frontier to the host first.  Stateful
+        crowds (e.g. :class:`NoisyCrowd`'s rng stream) must return ``None``;
+        per-pair ``ask`` bookkeeping (``n_asked``, billing) still runs when
+        the serving layer replays the posts afterwards."""
+        return None
+
     def reset(self) -> None:
         self.n_asked = 0
 
@@ -61,6 +72,12 @@ class PerfectCrowd(Crowd):
     def ask(self, pairs: PairSet, i: int) -> str:
         self.n_asked += 1
         return pairs.truth_label(i)
+
+    def precomputed_answers(self, pairs: PairSet) -> Optional[np.ndarray]:
+        if pairs.truth is None:
+            return None
+        return np.where(np.asarray(pairs.truth, bool), POS, NEG
+                        ).astype(np.int32)
 
 
 class NoisyCrowd(Crowd):

@@ -759,10 +759,9 @@ def _apply_fast_flagged_impl(state: SessionState, updates: jax.Array,
         cmask, has_conflict
 
 
-def _deduce_impl(state: SessionState) -> SessionState:
-    """One deduction sweep over the maintained roots + neg-key index.  Pairs
-    still in flight (``published``) are skipped — their crowd answers are the
-    ones that will label them (§5.2 stream semantics).
+def _deduce_from_impl(state: SessionState, ded: jax.Array) -> SessionState:
+    """Fold a precomputed per-pair deduction sweep ``ded`` into the state —
+    the shared tail of :func:`_deduce_impl` and the fused-kernel deduce.
 
     Deduction needs no structural maintenance beyond duplicate neg keys: a
     deduced-POS pair has equal roots by construction (no union can occur, so
@@ -770,7 +769,6 @@ def _deduce_impl(state: SessionState) -> SessionState:
     adjacent clusters — its key is merged in as a duplicate, which is what a
     from-scratch rebuild would also contain, keeping the state bit-identical."""
     n = state.n_objects
-    ded = _deduce_lookup_impl(state.roots, state.neg_keys, state.u, state.v, n)
     new = (ded != UNKNOWN) & (state.labels == UNKNOWN) & ~state.published
     labels = jnp.where(new, ded, state.labels)
     neg_new = new & (ded == NEG)
@@ -785,6 +783,51 @@ def _deduce_impl(state: SessionState) -> SessionState:
         lambda nk: _merge_sorted_impl(nk, jnp.sort(fresh)),
         lambda nk: nk, state.neg_keys)
     return dataclasses.replace(state, labels=labels, neg_keys=negk)
+
+
+def _deduce_impl(state: SessionState) -> SessionState:
+    """One deduction sweep over the maintained roots + neg-key index.  Pairs
+    still in flight (``published``) are skipped — their crowd answers are the
+    ones that will label them (§5.2 stream semantics)."""
+    ded = _deduce_lookup_impl(state.roots, state.neg_keys, state.u, state.v,
+                              state.n_objects)
+    return _deduce_from_impl(state, ded)
+
+
+# ---------------------------------------------------------------------------
+# Fused union–deduce routing (DESIGN.md §13): on TPU the screen's optimistic
+# union + self-key check and the deduce sweep's lookup go through the single
+# Pallas kernel in ``kernels/union_deduce``; elsewhere the XLA primitives
+# below are already fused by jit and bit-identical to the kernel's ref path.
+# ---------------------------------------------------------------------------
+def _screen_fused(state: SessionState, updates: jax.Array):
+    """Drop-in for :func:`_screen_impl` that routes the optimistic union and
+    the old-key self-key scan through the fused kernel on TPU backends."""
+    if jax.default_backend() != "tpu":
+        return _screen_impl(state, updates)
+    from repro.kernels.union_deduce.ops import fused_union_deduce
+    n = state.n_objects
+    new = (updates != UNKNOWN) & (state.labels == UNKNOWN)
+    pos_new = new & (updates == POS)
+    neg_new = new & (updates == NEG)
+    roots_opt, _, old_conflict = fused_union_deduce(
+        state.roots, state.u, state.v, pos_new, state.neg_keys, n)
+    fresh_self = neg_new & (roots_opt[state.u] == roots_opt[state.v])
+    has_conflict = old_conflict | jnp.any(fresh_self)
+    return new, pos_new, neg_new, roots_opt, has_conflict
+
+
+def _deduce_fused(state: SessionState) -> SessionState:
+    """Drop-in for :func:`_deduce_impl` via the fused kernel on TPU: with an
+    all-False union mask the kernel's no-op union on the compressed forest
+    and identity re-key reduce it to the plain deduce lookup."""
+    if jax.default_backend() != "tpu":
+        return _deduce_impl(state)
+    from repro.kernels.union_deduce.ops import fused_union_deduce
+    _, ded, _ = fused_union_deduce(
+        state.roots, state.u, state.v, jnp.zeros(state.u.shape, bool),
+        state.neg_keys, state.n_objects)
+    return _deduce_from_impl(state, ded)
 
 
 def _fold_impl(state: SessionState, updates: jax.Array,
@@ -892,6 +935,86 @@ def _mark_published_impl(state: SessionState, mask: jax.Array) -> SessionState:
     return dataclasses.replace(state, published=state.published | mask)
 
 
+# ---------------------------------------------------------------------------
+# On-device round engine (DESIGN.md §13): refresh -> frontier -> fold ->
+# deduce advanced k rounds inside one donated-buffer while_loop, so a
+# simulated crowd wave costs one dispatch instead of 3+ host round-trips.
+# ---------------------------------------------------------------------------
+# exit codes reported by `session_run_rounds`:
+ROUNDS_RUNNING = 0   # budget exhausted mid-stream — more rounds remain
+ROUNDS_DONE = 1      # no UNKNOWN labels left on entry to a round
+ROUNDS_EMPTY = 2     # empty frontier with UNKNOWNs left (host must deduce
+                     # or declare the session stuck — mirrors the legacy
+                     # empty-frontier branch)
+ROUNDS_CONFLICT = 3  # §9 screen fired — state is pre-fold; the host replays
+                     # the round through the exact sequential path
+
+
+def _select_state(pred, a: SessionState, b: SessionState) -> SessionState:
+    """Per-leaf ``where`` over two states (vmap-safe branchless select)."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _run_rounds_impl(state: SessionState, answers: jax.Array,
+                     prior: jax.Array, adaptive: jax.Array,
+                     rounds_allowed: jax.Array, max_rounds: int):
+    """Advance up to ``min(rounds_allowed, max_rounds)`` labeling rounds on
+    device.  ``answers`` is the precomputed (order-independent) crowd answer
+    per pair slot; each round folds exactly the frontier's slice of it —
+    bit-identical to the host loop that refreshes, selects, uploads those
+    answers and folds, because that is literally the loop body.
+
+    The loop exits early on completion, an empty frontier, or a §9 conflict
+    screen (the exact sequential replay cannot live under ``vmap`` — the
+    host runs that one round through the legacy path instead).  On conflict
+    the carried state is the *pre-fold* refreshed state; refresh is
+    idempotent, so the legacy replay of the same round starts bit-identical.
+
+    Returns ``(state, crowdsourced, round_sizes, rounds_done, code)``.
+    """
+    from .ordering import _refresh_masked_impl  # circular import (see §10)
+    P = state.u.shape[0]
+    ra = jnp.minimum(jnp.asarray(rounds_allowed, jnp.int32), max_rounds)
+
+    def cond(carry):
+        _, _, _, r, code = carry
+        return (code == ROUNDS_RUNNING) & (r < ra)
+
+    def body(carry):
+        st0, crowd, sizes, r, code = carry
+        done0 = ~jnp.any(st0.labels == UNKNOWN)
+        st = _refresh_masked_impl(st0, prior, adaptive)
+        frontier = _frontier_impl(st)
+        updates = jnp.where(frontier, answers, UNKNOWN)
+        new, pos_new, neg_new, roots_opt, has_conflict = _screen_fused(
+            st, updates)
+        labels, roots, negk, cmask = _apply_fast(st, updates, new, pos_new,
+                                                 neg_new, roots_opt)
+        folded = _finish_apply(st, labels, roots, negk, cmask, new,
+                               count_round=True,
+                               keep_conflicts_published=False)
+        folded = _deduce_fused(folded)
+        empty = ~jnp.any(frontier)
+        conflict = has_conflict & ~done0
+        advanced = ~done0 & ~conflict & ~empty
+        nxt = _select_state(done0, st0,
+                            _select_state(conflict, st, folded))
+        crowd = jnp.where(advanced, crowd | frontier, crowd)
+        cnt = frontier.sum(dtype=jnp.int32)
+        sizes = jnp.where(advanced, sizes.at[r].set(cnt), sizes)
+        code = jnp.where(done0, ROUNDS_DONE,
+               jnp.where(conflict, ROUNDS_CONFLICT,
+               jnp.where(empty, ROUNDS_EMPTY,
+                         ROUNDS_RUNNING))).astype(jnp.int32)
+        r = r + advanced.astype(jnp.int32)
+        return nxt, crowd, sizes, r, code
+
+    carry = (state, jnp.zeros((P,), bool),
+             jnp.zeros((max_rounds,), jnp.int32),
+             jnp.int32(0), jnp.int32(ROUNDS_RUNNING))
+    return jax.lax.while_loop(cond, body, carry)
+
+
 # jitted public entry points (counted host dispatches)
 _session_frontier_jit = jax.jit(_frontier_impl)
 _session_frontier_batch_jit = jax.jit(jax.vmap(_frontier_impl))
@@ -902,33 +1025,62 @@ def _apply_one(state, updates, keep_conflicts_published):
                        keep_conflicts_published=keep_conflicts_published)
 
 
-def _batched(fn):
-    """vmap over (state, updates) with the static policy flag closed over."""
+def _batched(fn, donate: bool = False):
+    """vmap over (state, updates) with the static policy flag closed over.
+    ``donate`` hands the stacked state's buffers to XLA for in-place reuse
+    (DESIGN.md §13) — only safe for variants whose callers never touch the
+    input state again."""
     def call(state, updates, keep_conflicts_published):
         return jax.vmap(functools.partial(
             fn, keep_conflicts_published=keep_conflicts_published))(
                 state, updates)
-    return jax.jit(call, static_argnames=("keep_conflicts_published",))
+    return jax.jit(call, static_argnames=("keep_conflicts_published",),
+                   donate_argnums=(0,) if donate else ())
 
 
+# Donation discipline (DESIGN.md §13): state-in/state-out transformations
+# donate the input state so XLA updates buffers in place instead of copying
+# ~(2P + n) words per round.  NOT donated: the speculative fast variants
+# (their caller re-dispatches the exact fold with the ORIGINAL state when a
+# screen flag fires), frontier/gains (read-only), mark_published/append
+# (cheap, callers often keep the old state), grow (shape-changing outputs
+# can't alias — XLA warns the donated buffers are unusable), and
+# session_from_labels (inputs are plain arrays the caller owns).
 _session_apply_jit = jax.jit(
-    _apply_one, static_argnames=("keep_conflicts_published",))
+    _apply_one, static_argnames=("keep_conflicts_published",),
+    donate_argnums=(0,))
 # exact batched variants: under vmap the screening cond lowers to a select
 # that executes BOTH branches, including the O(P^2) sequential replay — used
 # only as the fallback when a speculative fast fold's screen actually fired
-_session_apply_batch_jit = _batched(_apply_one)
+_session_apply_batch_jit = _batched(_apply_one, donate=True)
 _session_apply_fast_batch_jit = _batched(functools.partial(
     _apply_fast_flagged_impl, count_round=True))
-_session_deduce_jit = jax.jit(_deduce_impl)
-_session_deduce_batch_jit = jax.jit(jax.vmap(_deduce_impl))
+_session_deduce_jit = jax.jit(_deduce_impl, donate_argnums=(0,))
+_session_deduce_batch_jit = jax.jit(jax.vmap(_deduce_impl),
+                                    donate_argnums=(0,))
 _session_fold_jit = jax.jit(
-    _fold_impl, static_argnames=("keep_conflicts_published",))
-_session_fold_batch_jit = _batched(_fold_impl)
+    _fold_impl, static_argnames=("keep_conflicts_published",),
+    donate_argnums=(0,))
+_session_fold_batch_jit = _batched(_fold_impl, donate=True)
 _session_fold_fast_batch_jit = _batched(_fold_fast_flagged_impl)
 _session_mark_published_jit = jax.jit(_mark_published_impl)
 _session_mark_published_batch_jit = jax.jit(jax.vmap(_mark_published_impl))
-_session_trust_graph_jit = jax.jit(_trust_graph_impl)
-_session_trust_graph_batch_jit = jax.jit(jax.vmap(_trust_graph_impl))
+_session_trust_graph_jit = jax.jit(_trust_graph_impl, donate_argnums=(0,))
+_session_trust_graph_batch_jit = jax.jit(jax.vmap(_trust_graph_impl),
+                                         donate_argnums=(0,))
+_session_run_rounds_jit = jax.jit(
+    _run_rounds_impl, static_argnames=("max_rounds",), donate_argnums=(0,))
+
+
+def _run_rounds_batch(state, answers, prior, adaptive, rounds_allowed,
+                      max_rounds):
+    return jax.vmap(functools.partial(
+        _run_rounds_impl, max_rounds=max_rounds))(
+            state, answers, prior, adaptive, rounds_allowed)
+
+
+_session_run_rounds_batch_jit = jax.jit(
+    _run_rounds_batch, static_argnames=("max_rounds",), donate_argnums=(0,))
 
 
 def session_frontier(state: SessionState) -> jax.Array:
@@ -1026,6 +1178,60 @@ def session_trust_graph(state: SessionState, mask) -> SessionState:
 def session_trust_graph_batch(state: SessionState, mask) -> SessionState:
     engine_dispatches.add()
     return _session_trust_graph_batch_jit(state, mask)
+
+
+def session_run_rounds(state: SessionState, answers, max_rounds: int,
+                       prior=None, adaptive: bool = False,
+                       rounds_allowed=None):
+    """Advance up to ``max_rounds`` labeling rounds in ONE device dispatch
+    (DESIGN.md §13): refresh -> frontier -> fold -> deduce iterated inside a
+    donated-buffer ``while_loop``, bit-identical to driving the per-round
+    entry points from the host with the same ``answers``.
+
+    ``answers`` is (P,) int32 — the crowd's answer for every pair slot
+    (available up front when answers are order-independent, e.g. a replayed
+    or deterministic crowd); each round folds only the frontier's slice.
+    ``rounds_allowed`` (defaults to ``max_rounds``) caps rounds dynamically
+    (budget scheduling) without recompiling.  The input ``state`` is
+    donated — callers must not touch it afterwards.
+
+    Returns ``(state, crowdsourced, round_sizes, rounds_done, code)`` with
+    ``code`` one of the ``ROUNDS_*`` constants.
+    """
+    P = state.u.shape[0]
+    if prior is None:
+        prior = jnp.zeros((P,), jnp.float32)
+    if rounds_allowed is None:
+        rounds_allowed = max_rounds
+    engine_dispatches.add()
+    return _session_run_rounds_jit(
+        state, jnp.asarray(answers), jnp.asarray(prior, jnp.float32),
+        jnp.asarray(adaptive, bool),
+        jnp.asarray(rounds_allowed, jnp.int32), max_rounds=max_rounds)
+
+
+def session_run_rounds_batch(state: SessionState, answers, max_rounds: int,
+                             prior=None, adaptive=None,
+                             rounds_allowed=None):
+    """Advance B stacked sessions up to ``max_rounds`` rounds each in ONE
+    dispatch — the cross-lane megabatch the serving layer drives a whole
+    simulated crowd wave with.  Per-session ``adaptive`` (B,) bool and
+    ``rounds_allowed`` (B,) int32 preserve each lane's ordering policy and
+    budget; finished sessions are held fixed by the vmapped ``while_loop``
+    (batched results equal the unbatched ones, property-tested).  The input
+    ``state`` is donated."""
+    B, P = state.u.shape
+    if prior is None:
+        prior = jnp.zeros((B, P), jnp.float32)
+    if adaptive is None:
+        adaptive = np.zeros(B, bool)
+    if rounds_allowed is None:
+        rounds_allowed = np.full(B, max_rounds, np.int32)
+    engine_dispatches.add()
+    return _session_run_rounds_batch_jit(
+        state, jnp.asarray(answers), jnp.asarray(prior, jnp.float32),
+        jnp.asarray(adaptive, bool),
+        jnp.asarray(rounds_allowed, jnp.int32), max_rounds=max_rounds)
 
 
 # ---------------------------------------------------------------------------

@@ -117,8 +117,11 @@ def _refresh_masked_impl(state: SessionState, prior: jax.Array,
 
 _session_gains_jit = jax.jit(_gains_impl)
 _session_gains_batch_jit = jax.jit(jax.vmap(_gains_impl))
-_session_refresh_jit = jax.jit(_refresh_impl)
-_session_refresh_batch_jit = jax.jit(jax.vmap(_refresh_masked_impl))
+# refresh is state-in/state-out: donate the state so the priority write is
+# in place and the untouched fields alias straight through (DESIGN.md §13)
+_session_refresh_jit = jax.jit(_refresh_impl, donate_argnums=(0,))
+_session_refresh_batch_jit = jax.jit(jax.vmap(_refresh_masked_impl),
+                                     donate_argnums=(0,))
 
 
 def session_gains(state: SessionState, prior) -> jax.Array:

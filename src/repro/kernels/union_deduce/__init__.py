@@ -1,0 +1,8 @@
+"""Fused union–deduce kernel (DESIGN.md §13): the round engine's inner step
+— optimistic POS-edge union (hook + pointer jumping), neg-key self-key
+conflict screen, and transitive POS/NEG deduction — in one pass, so the
+forest compression and neg-key membership never round-trip through separate
+XLA ops on the accelerator path."""
+from .ops import fused_union_deduce
+
+__all__ = ["fused_union_deduce"]

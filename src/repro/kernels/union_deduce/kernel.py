@@ -1,0 +1,184 @@
+"""Pallas TPU kernel for the fused union–deduce step (DESIGN.md §13).
+
+Streaming-accumulation layout modeled on ``kernels/flash_attention``: the
+grid is the sorted neg-key index split into blocks with the key axis
+innermost ("arbitrary" = sequential), and the union-find forest lives in
+VMEM scratch that persists across those steps.
+
+* Step 0 runs the optimistic union — hook-to-min scatter + double pointer
+  jumping for a fixed ``ceil(log2 n) + 4`` rounds (an upper bound on the
+  while-loop trip count of the XLA path's ``_union_impl``; extra rounds are
+  no-ops once converged, so the result is bit-identical) followed by a full
+  compression sweep — and parks the compressed forest in scratch.
+* Every step re-canonicalizes its neg-key block under that forest on the
+  fly (decompose → remap → re-pair), accumulates per-query-pair NEG
+  membership hits into a VMEM accumulator (the flash-attention running-max
+  role), and ORs the block's self-key conflict bit into a scalar
+  accumulator — the re-keyed index is never materialized.
+* The last step derives POS/NEG/UNKNOWN per query pair from shared-root /
+  accumulated-hit and writes the three outputs.
+
+Interpret mode (CI's kernel-interpret job) is the parity tier against
+``ref.py``; the compiled TPU path additionally leans on Mosaic's
+gather/scatter lowering for the forest updates (memory plan in DESIGN.md
+§13).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.cluster_graph import NEG, POS, UNKNOWN
+
+# renamed from TPUCompilerParams after jax 0.4.x
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+DEFAULT_BK = 256
+
+
+def _make_kernel(n_objects: int, nk: int, key_dtype):
+    n = n_objects
+    # python ints: closure constants must not be traced arrays
+    big = n
+    sentinel = int(jnp.iinfo(key_dtype).max)
+    nn = n
+    # fixed-trip-count pointer jumping: hook-to-min with two jumps per round
+    # converges in O(log n) rounds; +4 margin keeps extra rounds as no-ops
+    union_iters = max(int(math.ceil(math.log2(max(n, 2)))), 1) + 4
+    comp_iters = max(int(math.ceil(math.log2(max(n, 2)))), 1) + 1
+
+    def kernel(parent0_ref, u_ref, v_ref, pos_ref, negk_ref,
+               roots_ref, ded_ref, conf_ref, parent_scr, hit_scr, conf_scr):
+        kj = pl.program_id(0)
+        u = u_ref[0, :]
+        v = v_ref[0, :]
+        pos = pos_ref[0, :] > 0
+
+        @pl.when(kj == 0)
+        def _union():
+            parent0 = parent0_ref[0, :]
+            uu = jnp.where(pos, u, 0)
+            vv = jnp.where(pos, v, 0)
+
+            def hook(_, p):
+                ru = p[uu]
+                rv = p[vv]
+                lo = jnp.minimum(ru, rv)
+                hi = jnp.where(pos, jnp.maximum(ru, rv), big)
+                tgt = jnp.where(pos, lo, big)
+                p = p.at[hi.clip(0, n - 1)].min(
+                    jnp.where(hi < big, tgt, big))
+                p = jnp.minimum(p, parent0)  # sentinel guard
+                p = p[p]
+                return p[p]
+
+            p = jax.lax.fori_loop(0, union_iters, hook, parent0)
+            p = jax.lax.fori_loop(0, comp_iters, lambda _, q: q[q], p)
+            parent_scr[0, :] = p
+            hit_scr[0, :] = jnp.zeros_like(hit_scr[0, :])
+            conf_scr[0, 0] = 0
+
+        parent = parent_scr[0, :]
+        # re-canonicalize this neg-key block under the unioned forest
+        kb = negk_ref[0, :]
+        pad = kb == sentinel
+        klo = jnp.where(pad, 0, kb // nn).astype(jnp.int32).clip(0, n - 1)
+        khi = jnp.where(pad, 0, kb % nn).astype(jnp.int32).clip(0, n - 1)
+        rlo = parent[klo]
+        rhi = parent[khi]
+        conf_scr[0, 0] = jnp.maximum(
+            conf_scr[0, 0],
+            jnp.any(~pad & (rlo == rhi)).astype(jnp.int32))
+        rekeyed = jnp.where(
+            pad, sentinel,
+            jnp.minimum(rlo, rhi).astype(key_dtype) * nn
+            + jnp.maximum(rlo, rhi).astype(key_dtype))
+        ru = parent[u]
+        rv = parent[v]
+        same = ru == rv
+        qk = (jnp.minimum(ru, rv).astype(key_dtype) * nn
+              + jnp.maximum(ru, rv).astype(key_dtype))
+        hits = jnp.any((qk[:, None] == rekeyed[None, :]) & ~pad[None, :],
+                       axis=1)
+        hit_scr[0, :] = jnp.maximum(hit_scr[0, :],
+                                    (hits & ~same).astype(jnp.int32))
+
+        @pl.when(kj == nk - 1)
+        def _finalize():
+            p = parent_scr[0, :]
+            roots_ref[0, :] = p
+            pu = p[u]
+            pv = p[v]
+            ded_ref[0, :] = jnp.where(
+                pu == pv, POS,
+                jnp.where(hit_scr[0, :] > 0, NEG, UNKNOWN)
+            ).astype(jnp.int32)
+            conf_ref[0, 0] = conf_scr[0, 0]
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_objects", "bk", "interpret"))
+def union_deduce(parent0: jax.Array, u: jax.Array, v: jax.Array,
+                 pos_mask: jax.Array, neg_keys: jax.Array,
+                 n_objects: int, bk: int = DEFAULT_BK,
+                 interpret: bool = False):
+    """Fused union + self-key screen + transitive deduce, one kernel launch.
+
+    parent0: (n,) int32; u, v: (P,) int32; pos_mask: (P,) bool;
+    neg_keys: (P,) sorted sentinel-padded canonical keys.
+    Returns ``(roots (n,) int32, deduced (P,) int32, conflict () bool)``.
+    """
+    P = u.shape[0]
+    n = n_objects
+    kdt = neg_keys.dtype
+    bk = min(bk, max(P, 1))
+    pk = (-P) % bk
+    negk = neg_keys
+    if pk:
+        # sentinel padding joins the index's own pad slots: no membership
+        # hit, no conflict bit
+        negk = jnp.concatenate(
+            [negk, jnp.full((pk,), jnp.iinfo(kdt).max, kdt)])
+    nk = (P + pk) // bk
+    roots, ded, conf = pl.pallas_call(
+        _make_kernel(n, nk, kdt),
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda kj: (0, 0)),
+            pl.BlockSpec((1, P), lambda kj: (0, 0)),
+            pl.BlockSpec((1, P), lambda kj: (0, 0)),
+            pl.BlockSpec((1, P), lambda kj: (0, 0)),
+            pl.BlockSpec((1, bk), lambda kj: (0, kj)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda kj: (0, 0)),
+            pl.BlockSpec((1, P), lambda kj: (0, 0)),
+            pl.BlockSpec((1, 1), lambda kj: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, P), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, n), jnp.int32),
+            pltpu.VMEM((1, P), jnp.int32),
+            pltpu.VMEM((1, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(parent0.reshape(1, n).astype(jnp.int32),
+      u.reshape(1, P).astype(jnp.int32),
+      v.reshape(1, P).astype(jnp.int32),
+      pos_mask.reshape(1, P).astype(jnp.int32),
+      negk.reshape(1, P + pk))
+    return roots[0], ded[0], conf[0, 0] > 0

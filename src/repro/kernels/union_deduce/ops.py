@@ -1,0 +1,48 @@
+"""Dispatch layer for the fused union–deduce kernel.
+
+Implementation resolution mirrors ``kernels.pair_scores.ops``:
+
+* ``impl="ref"``       — pure-XLA oracle (:mod:`.ref`), bit-identical to the
+  per-round engine by construction; traceable inside ``vmap``/``while_loop``.
+* ``impl="pallas"``    — compiled Pallas TPU kernel.
+* ``impl="interpret"`` — Pallas kernel under the interpreter (CI parity tier).
+* ``impl="auto"``      — Pallas on TPU backends, ref elsewhere.
+
+The round engine in ``core.jax_graph`` calls this with ``impl="auto"`` so the
+CPU CI path stays bit-exact while TPU runs get the single-launch kernel.
+"""
+from __future__ import annotations
+
+import jax
+
+from .ref import fused_union_deduce_ref
+
+VALID_IMPLS = ("auto", "pallas", "interpret", "ref")
+
+
+def fused_union_deduce(parent0: jax.Array, u: jax.Array, v: jax.Array,
+                       pos_mask: jax.Array, neg_keys: jax.Array,
+                       n_objects: int, impl: str = "auto"):
+    """Fused union + self-key conflict screen + transitive deduce.
+
+    Args:
+        parent0: ``(n,)`` int32 compressed forest (``SessionState.roots``).
+        u, v: ``(P,)`` int32 pair endpoints.
+        pos_mask: ``(P,)`` bool — edges to union before screening/deducing.
+        neg_keys: ``(P,)`` sorted sentinel-padded canonical neg-key index.
+        n_objects: static object count.
+        impl: one of ``VALID_IMPLS``.
+
+    Returns:
+        ``(roots (n,) int32, deduced (P,) int32, conflict () bool)``.
+    """
+    if impl not in VALID_IMPLS:
+        raise ValueError(
+            f"impl must be one of {VALID_IMPLS}, got {impl!r}")
+    if impl == "ref" or (impl == "auto"
+                         and jax.default_backend() != "tpu"):
+        return fused_union_deduce_ref(parent0, u, v, pos_mask, neg_keys,
+                                      n_objects)
+    from .kernel import union_deduce
+    return union_deduce(parent0, u, v, pos_mask, neg_keys, n_objects,
+                        interpret=(impl == "interpret"))

@@ -1,0 +1,41 @@
+"""XLA oracle for the fused union–deduce step (DESIGN.md §13).
+
+Composes the engine's own primitives — ``_union_impl`` (hook-to-min +
+bounded pointer jumping), ``_rekey_impl`` (decompose → remap → re-sort) and
+``_deduce_lookup_impl`` (sorted-membership transitive lookup) — so the ref
+path is bit-identical to the per-round engine by construction: the round
+engine routes through :func:`repro.kernels.union_deduce.ops.fused_union_deduce`,
+which resolves to this function on every non-TPU backend.
+
+Semantics, given a session's live forest and sorted neg-key index:
+
+* ``roots``    — the forest after unioning every ``pos_mask`` edge.
+* ``deduced``  — per query pair (u_i, v_i): POS when both endpoints share a
+  root under the *new* forest, NEG when the pair's canonical root-pair key
+  hits the neg-key index re-canonicalized under that forest, else UNKNOWN.
+* ``conflict`` — True when any existing neg key's endpoints landed in one
+  cluster under the new forest (the §9 corruption signature: a self-key).
+
+With ``pos_mask`` all-False the union is a no-op on a compressed forest and
+the re-key maps the sorted index to itself, so ``deduced`` equals the plain
+deduce sweep — one code path serves both the screen and the post-fold
+deduction inside the round engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_union_deduce_ref(parent0: jax.Array, u: jax.Array, v: jax.Array,
+                           pos_mask: jax.Array, neg_keys: jax.Array,
+                           n_objects: int):
+    """Returns ``(roots, deduced, conflict)`` — see module docstring."""
+    from repro.core.jax_graph import (_decompose_keys, _deduce_lookup_impl,
+                                      _rekey_impl, _union_impl)
+    roots = _union_impl(parent0, u, v, pos_mask, n_objects)
+    lo, hi, is_pad = _decompose_keys(neg_keys, n_objects)
+    conflict = jnp.any(~is_pad & (roots[lo] == roots[hi]))
+    rekeyed = _rekey_impl(neg_keys, roots, n_objects)
+    deduced = _deduce_lookup_impl(roots, rekeyed, u, v, n_objects)
+    return roots, deduced, conflict

@@ -41,6 +41,24 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, max_len=max_len))
 
+        # whole-wave greedy decode in one dispatch (DESIGN.md §13): the
+        # per-token host loop (steps round trips, cache re-uploaded each
+        # time) becomes a lax.scan with the cache donated — it stays
+        # device-resident and is updated in place across all steps
+        def _decode_loop(p, cache, cur, steps):
+            def step(carry, _):
+                cache, cur = carry
+                logits, cache = M.decode_step(p, cache,
+                                              {"tokens": cur[:, None]}, cfg)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return (cache, nxt), nxt
+            (cache, _), toks = jax.lax.scan(step, (cache, cur), None,
+                                            length=steps)
+            return toks  # (steps, B): tokens emitted after ``cur``
+
+        self._decode_loop = jax.jit(_decode_loop, static_argnums=(3,),
+                                    donate_argnums=(1,))
+
     def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Processes requests in lane-sized waves (prefill batch, then decode
         until every lane finishes).  Returns {rid: generated tokens}."""
@@ -57,17 +75,20 @@ class ServeEngine:
         for j, r in enumerate(wave):
             toks[j, S - len(r.prompt):] = r.prompt   # left-pad
         cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-        out: Dict[int, List[int]] = {r.rid: [] for r in wave}
         cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         steps = max(r.max_new_tokens for r in wave)
-        for t in range(steps):
-            for j, r in enumerate(wave):
-                if t < r.max_new_tokens:
-                    out[r.rid].append(int(cur[j]))
-            logits, cache = self._decode(self.params, cache,
-                                         {"tokens": cur[:, None]})
-            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return out
+        if steps <= 0:
+            return {r.rid: [] for r in wave}
+        # the wave emits cur, then steps-1 scanned continuations — one
+        # decode dispatch total, cache donated into the scan
+        if steps > 1:
+            nxt = self._decode_loop(self.params, cache, cur, steps - 1)
+            emitted = np.concatenate([np.asarray(cur)[None],
+                                      np.asarray(nxt)])
+        else:
+            emitted = np.asarray(cur)[None]
+        return {r.rid: emitted[:r.max_new_tokens, j].tolist()
+                for j, r in enumerate(wave)}
 
 
 def score_pairs_with_lm(cfg: ModelConfig, params, texts_a: List[str],

@@ -78,12 +78,13 @@ import numpy as np
 from repro.core.crowd import CostModel, Crowd, CrowdGateway, LatencyModel, \
     PerfectCrowd
 from repro.core.jax_graph import (
+    ROUNDS_CONFLICT, ROUNDS_DONE, ROUNDS_EMPTY, ROUNDS_RUNNING,
     UNKNOWN, POS, SessionState, engine_dispatches, make_session_state,
     next_pow2, pair_keys_fit, session_append_pairs, session_apply_answers,
     session_deduce, session_fold_answers, session_fold_answers_batch,
     session_frontier, session_frontier_batch, session_grow,
     session_mark_published, session_mark_published_batch,
-    session_trust_graph, session_trust_graph_batch)
+    session_run_rounds_batch, session_trust_graph, session_trust_graph_batch)
 from repro.core.metrics import Quality, quality
 from repro.core.ordering import (session_gains, session_gains_batch,
                                  session_refresh_priorities,
@@ -160,6 +161,12 @@ class _Lane:
     in_flight: int = 0             # pairs posted to the gateway, unanswered
     n_requeried: int = 0           # escalated re-posts for rejected answers
     budget_stopped: bool = False   # out of budget; graph resolved the rest
+    # on-device round engine (DESIGN.md §13): the crowd's order-independent
+    # answer per ordered pair slot (None when the crowd is stateful), and
+    # whether the fused path is still trusted for this lane (a §9 conflict
+    # screen drops the lane back to the exact per-round path for good)
+    answers_host: Optional[np.ndarray] = None
+    fused_ok: bool = True
 
     @property
     def done(self) -> bool:
@@ -238,7 +245,8 @@ class JoinService:
                  conflict_policy: str = "drop", order: str = "expected",
                  budget_cents: Optional[float] = None,
                  cost_per_assignment: Optional[float] = None,
-                 slots_per_round: Optional[int] = None):
+                 slots_per_round: Optional[int] = None,
+                 fused_rounds: bool = True):
         if conflict_policy not in ("drop", "requery"):
             raise ValueError(
                 f"conflict_policy must be 'drop' or 'requery', "
@@ -262,6 +270,11 @@ class JoinService:
         self.budget_cents = budget_cents
         self.cost_per_assignment = cost_per_assignment
         self.slots_per_round = slots_per_round
+        # on-device round engine (DESIGN.md §13): when every active lane's
+        # crowd wave can be simulated on device (order-independent answers,
+        # immediate transport, no budget/slot caps), one megabatch dispatch
+        # advances k rounds across ALL lanes instead of 3+ dispatches/round
+        self.fused_rounds = fused_rounds
         self.queue: Deque[JoinRequest] = collections.deque()
         self.results: Dict[int, JoinSessionResult] = {}
         self._next_rid = 0
@@ -541,6 +554,7 @@ class JoinService:
             per_pair_cents=float(rate)
             * getattr(req.crowd, "n_assignments", 1),
             budget_cents=req.budget_cents,
+            answers_host=req.crowd.precomputed_answers(ordered),
         )
 
     # -- lane growth (DESIGN.md §11) -----------------------------------------
@@ -617,6 +631,7 @@ class JoinService:
         lane.crowdsourced = np.concatenate(
             [lane.crowdsourced, np.zeros(len(new_pairs), bool)])
         lane.p = new_p
+        lane.answers_host = req.crowd.precomputed_answers(lane.ordered)
 
     def _ingest_pending(self, lane: _Lane) -> bool:
         """Consume queued arrival epochs for this lane — all of them for the
@@ -782,6 +797,107 @@ class JoinService:
         lane.state = session_trust_graph(lane.state, jnp.asarray(mask))
         lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
         lane.budget_stopped = True
+
+    # -- on-device round engine (DESIGN.md §13) ------------------------------
+    # rounds folded per megabatch dispatch; static so every wave shares one
+    # jit cache entry per capacity bucket
+    FUSED_ROUNDS_PER_DISPATCH = 8
+
+    def _fused_eligible(self, lane: _Lane) -> bool:
+        """True when this lane's next crowd wave can be simulated entirely on
+        device: answers must be order-independent (``answers_host``), the
+        transport immediate (a latency model makes answer arrival part of
+        the semantics), budgets/slot caps unconstrained (they re-decide per
+        round on host), no arrival epochs pending (they grow the state
+        mid-wave), and no prior §9 conflict on this lane (the exact replay
+        is host-driven)."""
+        return (self.fused_rounds
+                and self.latency is None
+                and self.slots_per_round is None
+                and lane.budget_cents is None
+                and not lane.budget_stopped
+                and lane.fused_ok
+                and lane.answers_host is not None
+                and not self._pending_arrivals.get(lane.req.rid))
+
+    def _drive_fused(self, active: List[_Lane],
+                     gateway: CrowdGateway) -> bool:
+        """Advance every active lane a whole crowd wave with amortized <1
+        dispatch per round: grow the lanes to one shared capacity bucket,
+        stack them into a cross-lane megabatch, and loop
+        ``session_run_rounds_batch`` (k rounds per dispatch) until no lane
+        is mid-stream.  Gateway traffic — billing, ``n_asked``, tickets —
+        is replayed after the device rounds: answers are order-independent,
+        so posting the crowdsourced pairs late produces the identical
+        ledger the per-round path would have.  A lane whose §9 screen fires
+        exits pre-fold with ``fused_ok=False`` (nothing posted for the
+        conflicted round) and re-runs it through the exact legacy path.
+        Returns True iff any lane made progress."""
+        self._flush_stacks()
+        p_cap = max(int(l.state.u.shape[0]) for l in active)
+        n_cap = max(l.state.n_objects for l in active)
+        for lane in active:
+            if (int(lane.state.u.shape[0]),
+                    lane.state.n_objects) != (p_cap, n_cap):
+                lane.state = session_grow(lane.state, p_cap, n_cap)
+        B = len(active)
+        stacked = _stack_states([l.state for l in active])
+        answers = np.full((B, p_cap), UNKNOWN, np.int32)
+        priors = np.zeros((B, p_cap), np.float32)
+        for b, lane in enumerate(active):
+            answers[b, :lane.p] = lane.answers_host[:lane.p]
+            priors[b, :len(lane.prior_host)] = lane.prior_host
+        engine_dispatches.add(2)  # answers + priors upload
+        answers_dev = jnp.asarray(answers)
+        priors_dev = jnp.asarray(priors)
+        adaptive = np.array([l.adaptive for l in active])
+        K = self.FUSED_ROUNDS_PER_DISPATCH
+        progress = False
+        running = True
+        while running:
+            stacked, crowd_new, sizes, rdone, codes = \
+                session_run_rounds_batch(stacked, answers_dev, K,
+                                         prior=priors_dev, adaptive=adaptive)
+            crowd_new = np.asarray(crowd_new)
+            sizes = np.asarray(sizes)
+            rdone = np.asarray(rdone)
+            codes = np.asarray(codes)
+            labels = np.asarray(stacked.labels)
+            running = False
+            stuck: List[int] = []
+            for b, lane in enumerate(active):
+                for r in range(int(rdone[b])):
+                    lane.round_sizes.append(int(sizes[b, r]))
+                idx = np.nonzero(crowd_new[b, :lane.p])[0]
+                if len(idx):
+                    # replay the wave's gateway traffic: per-pair billing
+                    # and ask bookkeeping are order-independent, so one
+                    # post covers the rounds just simulated
+                    lane.crowdsourced[idx] = True
+                    gateway.post(lane.req.rid, lane.ordered, idx,
+                                 lane.req.crowd,
+                                 cents_per_assignment=lane.rate_cents)
+                    progress = True
+                new = labels[b, :lane.p]
+                progress |= bool((new != lane.labels_host).any())
+                lane.labels_host = new
+                code = int(codes[b])
+                if code == ROUNDS_CONFLICT:
+                    lane.fused_ok = False
+                elif (new == UNKNOWN).any():
+                    if code == ROUNDS_EMPTY:
+                        stuck.append(lane.req.rid)
+                    else:  # ROUNDS_RUNNING: wave continues next dispatch
+                        running = True
+            gateway.drain()  # consume the replayed posts (immediate mode)
+            if stuck:
+                raise RuntimeError(
+                    "join engine stuck: no frontier and nothing deducible "
+                    f"for rids {stuck}")
+        engine_dispatches.add()  # per-lane gathers out of the stack
+        for b, lane in enumerate(active):
+            lane.state = _index_state(stacked, b)
+        return progress
 
     def _step(self, active: List[_Lane], gateway: CrowdGateway) -> bool:
         """One engine round over the occupied lanes: an optional batched
@@ -982,6 +1098,18 @@ class JoinService:
             if refilled:
                 # zero-pair sessions are born done — finalize without posting
                 active = self._retire_done(active, gateway)
+            if active and gateway.in_flight == 0 and \
+                    all(self._fused_eligible(lane) and lane.in_flight == 0
+                        for lane in active):
+                # on-device round engine (DESIGN.md §13): with an immediate
+                # gateway and nothing in flight, the event-driven discipline
+                # degenerates to per-lane round barriers — the same wave the
+                # fused megabatch simulates.  A conflicted lane drops back to
+                # the event loop below with its fused_ok cleared.
+                if self._drive_fused(active, gateway):
+                    active = self._retire_done(active, gateway)
+                    continue
+            if refilled:
                 for lane in active:
                     if lane.in_flight == 0 and not lane.round_sizes:
                         self._publish(lane, gateway)
@@ -1079,6 +1207,15 @@ class JoinService:
                 # every open lane is just waiting on queued arrival epochs
                 # (interleaved streams); ingest resumes next iteration
                 continue
+            if all(self._fused_eligible(lane) for lane in active):
+                # on-device round engine (DESIGN.md §13): the whole crowd
+                # wave runs as megabatch dispatches across all lanes.  No
+                # progress means every lane conflicted on its next round —
+                # fall through to the exact per-round path, which replays
+                # that round with the full §9 conflict machinery.
+                if self._drive_fused(active, gateway):
+                    active = self._retire_done(active, gateway)
+                    continue
             if not self._step(active, gateway):
                 raise RuntimeError(
                     "join engine stuck: no frontier and nothing deducible "

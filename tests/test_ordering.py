@@ -109,17 +109,21 @@ def test_refresh_never_revives_published_or_deduced_pairs(world):
     or already-labeled pair."""
     n, u, v, labels, published, lik = world
     state = session_from_labels(u, v, labels, published, n)
+    # refresh donates its input state (DESIGN.md §13) — snapshot the fields
+    # to host memory before the call consumes the buffers
+    before = {f: np.asarray(getattr(state, f))
+              for f in ("u", "v", "labels", "published", "roots", "neg_keys",
+                        "rounds", "conflicts", "priority")}
     refreshed = session_refresh_priorities(state, jnp.asarray(lik))
     # non-priority fields bit-identical
     for f in ("u", "v", "labels", "published", "roots", "neg_keys",
               "rounds", "conflicts"):
         np.testing.assert_array_equal(
-            np.asarray(getattr(refreshed, f)), np.asarray(getattr(state, f)))
+            np.asarray(getattr(refreshed, f)), before[f])
     # published / labeled pairs keep their old priority
     frozen = (labels != UNKNOWN) | published
     np.testing.assert_array_equal(
-        np.asarray(refreshed.priority)[frozen],
-        np.asarray(state.priority)[frozen])
+        np.asarray(refreshed.priority)[frozen], before["priority"][frozen])
     # and the frontier still cannot select them
     frontier = np.asarray(session_frontier(refreshed))
     assert not (frontier & frozen).any()
