@@ -1,0 +1,194 @@
+"""Plan layer + cross-query cluster cache (DESIGN.md §14).
+
+Stages, benchmarked separately:
+
+* repeat query — a filtered multi-way join runs cold (crowd pays) then
+  warm over the shared ``ClusterCache``; the payload reports the
+  crowd-question savings fraction (the CI smoke gates on ≥ 0.4 — an
+  identical repeat measures ≈ 1.0) and asserts the warm result is
+  signature-identical to the cold one;
+* filter pushdown — the optimized plan vs ``optimize_plans=False``:
+  same result signature, strictly fewer candidate pairs reaching the
+  crowd join (asserted into the payload);
+* join ordering — expected crowd cost of the optimizer's greedy leg
+  order vs the worst enumerated order, from the sampled selectivity
+  model.
+
+Emits harness CSV rows plus one ``# JSON`` line.  ``BENCH_JOIN_TINY=1``
+selects the seconds-scale CI-smoke configuration.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import row
+
+
+def _tiny() -> bool:
+    return os.environ.get("BENCH_JOIN_TINY", "") not in ("", "0")
+
+
+def _catalogs(rng, sizes, n_ent, dim=16, noise=0.05):
+    from repro.plan import Collection
+
+    cents = rng.normal(size=(n_ent, dim))
+    out = []
+    for name, n in zip("abcde", sizes):
+        ids = rng.integers(0, n_ent, n)
+        emb = (cents[ids] + noise * rng.normal(size=(n, dim))
+               ).astype(np.float32)
+        out.append(Collection(
+            name, emb,
+            attrs={"sku": np.arange(n),
+                   "price": rng.integers(5, 100, n),
+                   "region": ids % 3},
+            entities=ids))
+    return out
+
+
+def _plan(colls):
+    from repro.plan import Cmp, Filter, MultiJoin, Scan
+
+    join = MultiJoin([Scan(c) for c in colls], threshold=0.80)
+    return Filter(Cmp(f"{colls[0].name}.price", "<", 70),
+                  Filter(Cmp(f"{colls[1].name}.region", "==", 0), join))
+
+
+def _bench_repeat_query(out: list, payload: dict) -> None:
+    """Cold vs warm execution over a shared cache: the warm run crowdsources
+    only novel pairs (none, on an identical repeat) and is billed nothing
+    for cache hits."""
+    from repro.plan import ClusterCache, PlanExecutor
+
+    rng = np.random.default_rng(3)
+    sizes, n_ent = ((24, 20, 18), 12) if _tiny() else ((90, 80, 70), 30)
+    plan = _plan(_catalogs(rng, sizes, n_ent))
+
+    cache = ClusterCache()
+    t0 = time.perf_counter()
+    cold = PlanExecutor(cache=cache).execute(plan)
+    cold_secs = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = PlanExecutor(cache=cache).execute(plan)
+    warm_secs = time.perf_counter() - t0
+
+    assert warm.signature() == cold.signature()
+    assert warm.spent_cents == 0.0 or warm.n_crowdsourced > 0
+    saved = 1.0 - warm.n_crowdsourced / max(cold.n_crowdsourced, 1)
+    assert saved >= 0.4, (warm.n_crowdsourced, cold.n_crowdsourced)
+    payload["repeat"] = {
+        "sizes": list(sizes),
+        "cold_crowdsourced": cold.n_crowdsourced,
+        "warm_crowdsourced": warm.n_crowdsourced,
+        "warm_cache_hits": warm.n_cache_hits,
+        "cold_spent_cents": cold.spent_cents,
+        "warm_spent_cents": warm.spent_cents,
+        "saved_frac": saved,
+        "signature_equal": warm.signature() == cold.signature(),
+        "secs": {"cold": cold_secs, "warm": warm_secs},
+    }
+    out.append(row(
+        f"plan/repeat_{'x'.join(map(str, sizes))}", warm_secs * 1e6,
+        f"cold_crowd={cold.n_crowdsourced} warm_crowd={warm.n_crowdsourced} "
+        f"hits={warm.n_cache_hits} saved={saved:.0%}"))
+
+
+def _bench_filter_pushdown(out: list, payload: dict) -> None:
+    """Optimized vs unoptimized execution of the same filtered join: the
+    pushed-down plan sends strictly fewer candidate pairs to the crowd
+    while producing the identical result signature."""
+    from repro.plan import ClusterCache, PlanExecutor
+
+    rng = np.random.default_rng(4)
+    sizes, n_ent = ((24, 20, 18), 12) if _tiny() else ((90, 80, 70), 30)
+    plan = _plan(_catalogs(rng, sizes, n_ent))
+
+    t0 = time.perf_counter()
+    raw = PlanExecutor(cache=ClusterCache(),
+                       optimize_plans=False).execute(plan)
+    raw_secs = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    opt = PlanExecutor(cache=ClusterCache()).execute(plan)
+    opt_secs = time.perf_counter() - t0
+
+    assert opt.signature() == raw.signature()
+    assert opt.n_candidates < raw.n_candidates, (opt.n_candidates,
+                                                 raw.n_candidates)
+    reduction = 1.0 - opt.n_candidates / max(raw.n_candidates, 1)
+    payload["pushdown"] = {
+        "sizes": list(sizes),
+        "raw_candidates": raw.n_candidates,
+        "optimized_candidates": opt.n_candidates,
+        "candidate_reduction": reduction,
+        "raw_crowdsourced": raw.n_crowdsourced,
+        "optimized_crowdsourced": opt.n_crowdsourced,
+        "signature_equal": opt.signature() == raw.signature(),
+        "secs": {"raw": raw_secs, "optimized": opt_secs},
+    }
+    out.append(row(
+        f"plan/pushdown_{'x'.join(map(str, sizes))}", opt_secs * 1e6,
+        f"cands={raw.n_candidates}->{opt.n_candidates} "
+        f"({reduction:.0%} fewer) crowd={raw.n_crowdsourced}"
+        f"->{opt.n_crowdsourced}"))
+
+
+def _bench_join_order(out: list, payload: dict) -> None:
+    """The greedy leg order vs the worst enumerated order under the sampled
+    selectivity cost model the optimizer uses."""
+    from repro.plan import MultiJoin, Scan, expected_crowd_cost, optimize
+    from repro.plan.optimizer import _pair_selectivity, _sample_rows
+
+    rng = np.random.default_rng(5)
+    sizes, n_ent = ((24, 20, 18, 16), 12) if _tiny() else \
+        ((90, 80, 70, 60), 30)
+    colls = _catalogs(rng, sizes, n_ent)
+    plan = MultiJoin([Scan(c) for c in colls], threshold=0.80)
+
+    t0 = time.perf_counter()
+    opt = optimize(plan)
+    opt_secs = time.perf_counter() - t0
+    names = [c.name for c in colls]
+    order_names = [next(iter(kid.collections())) for kid in opt.children()]
+    order = [names.index(n) for n in order_names]
+
+    n = len(colls)
+    sampled = [_sample_rows(c.embeddings, np.ones(len(c), bool), 64, i)
+               for i, c in enumerate(colls)]
+    sel = np.zeros((n, n))
+    for i, j in itertools.combinations(range(n), 2):
+        sel[i, j] = sel[j, i] = _pair_selectivity(sampled[i], sampled[j],
+                                                  0.80)
+    nsize = [len(c) for c in colls]
+    costs = {perm: expected_crowd_cost(nsize, sel, list(perm))
+             for perm in itertools.permutations(range(n))}
+    greedy_cost = costs[tuple(order)]
+    worst = max(costs.values())
+    best = min(costs.values())
+    payload["ordering"] = {
+        "sizes": list(sizes),
+        "greedy_order": order_names,
+        "greedy_cost": greedy_cost,
+        "best_cost": best,
+        "worst_cost": worst,
+        "greedy_vs_worst_saved_frac": 1.0 - greedy_cost / max(worst, 1e-9),
+        "optimize_secs": opt_secs,
+    }
+    out.append(row(
+        f"plan/order_{len(sizes)}legs", opt_secs * 1e6,
+        f"greedy={greedy_cost:.0f} best={best:.0f} worst={worst:.0f} "
+        f"order={'-'.join(order_names)}"))
+
+
+def run() -> list:
+    out: list = []
+    payload: dict = {}
+    _bench_repeat_query(out, payload)
+    _bench_filter_pushdown(out, payload)
+    _bench_join_order(out, payload)
+    out.append("# JSON " + json.dumps({"bench_plan": payload}))
+    return out

@@ -43,18 +43,24 @@ def _trajectory(payloads: dict) -> dict:
         traj["crowd_cents_per_resolved_pair"] = \
             svc["human"]["cents_per_resolved_pair"]
         traj["crowd_saved_frac"] = svc["human"]["saved_frac"]
+    plan = payloads.get("bench_plan", {})
+    if "repeat" in plan:  # §14 plan layer + cluster cache headline numbers
+        traj["plan_repeat_saved_frac"] = plan["repeat"]["saved_frac"]
+        traj["plan_pushdown_reduction"] = \
+            plan["pushdown"]["candidate_reduction"]
     return traj
 
 
 def main() -> None:
-    from . import (bench_blocking, bench_join_service, bench_streaming,
-                   boruvka_parity, fig11_clusters, fig12_transitive,
-                   fig13_orders, fig14_parallel, fig16_optimizations,
-                   noise_sweep, table1_latency, table2_quality)
+    from . import (bench_blocking, bench_join_service, bench_plan,
+                   bench_streaming, boruvka_parity, fig11_clusters,
+                   fig12_transitive, fig13_orders, fig14_parallel,
+                   fig16_optimizations, noise_sweep, table1_latency,
+                   table2_quality)
     mods = [fig11_clusters, fig12_transitive, fig13_orders, fig14_parallel,
             fig16_optimizations, table1_latency, table2_quality,
             boruvka_parity, bench_join_service, bench_streaming,
-            bench_blocking, noise_sweep]
+            bench_blocking, bench_plan, noise_sweep]
     args = sys.argv[1:]
     snapshot_path = None
     for arg in list(args):
@@ -94,7 +100,8 @@ def main() -> None:
         # streaming and blocking trajectories are tracked in-repo too
         outdir = os.path.dirname(snapshot_path)
         for bench, fname in (("bench_streaming", "BENCH_streaming.json"),
-                             ("bench_blocking", "BENCH_blocking.json")):
+                             ("bench_blocking", "BENCH_blocking.json"),
+                             ("bench_plan", "BENCH_plan.json")):
             if bench in payloads:
                 _write(os.path.join(outdir, fname) if outdir else fname, {
                     "config": config,

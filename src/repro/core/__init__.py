@@ -24,7 +24,8 @@ from .jax_graph import (NEG, POS, ROUNDS_CONFLICT, ROUNDS_DONE, ROUNDS_EMPTY,
                         session_frontier_batch, session_grow,
                         session_grow_batch, session_mark_published,
                         session_mark_published_batch, session_run_rounds,
-                        session_run_rounds_batch, session_trust_graph,
+                        session_run_rounds_batch, session_seed_labels,
+                        session_seed_labels_batch, session_trust_graph,
                         session_trust_graph_batch)
 from .join import JoinResult, crowdsourced_join
 from .labeling import (LabelingResult, label_all_crowdsourced,
@@ -69,6 +70,7 @@ __all__ = [
     "session_apply_answers", "session_apply_answers_batch",
     "session_deduce", "session_deduce_batch",
     "session_fold_answers", "session_fold_answers_batch",
+    "session_seed_labels", "session_seed_labels_batch",
     "session_mark_published", "session_mark_published_batch",
     "session_trust_graph", "session_trust_graph_batch",
     "session_run_rounds", "session_run_rounds_batch",

@@ -36,6 +36,10 @@ State transformations (all jitted, state-in/state-out):
   maintained roots + neg-key index; published pairs are skipped (their
   answers are in flight).
 * ``session_fold_answers`` — apply + deduce fused into one dispatch.
+* ``session_seed_labels`` — warm-start fold of cached cross-query cluster
+  verdicts (DESIGN.md §14): identical to ``session_fold_answers`` except the
+  ``rounds`` counter does not advance — seeds are prior queries' capital,
+  not a crowd round of this session.
 * ``session_trust_graph`` — the requery ladder's endpoint: un-publish a set
   of exhausted pairs and let deduction label them from the graph.
 
@@ -846,6 +850,27 @@ def _fold_fast_flagged_impl(state: SessionState, updates: jax.Array,
     return _deduce_impl(state), cmask, flag
 
 
+def _seed_labels_impl(state: SessionState, seeds: jax.Array
+                      ) -> Tuple[SessionState, jax.Array]:
+    """Warm-start a session from cached cluster verdicts (DESIGN.md §14).
+
+    ``seeds`` is (P,) int32 {UNKNOWN, NEG, POS} — per-slot labels recovered
+    from a cross-query ``ClusterCache`` rather than paid for again.  The fold
+    is exactly an answer fold (same conflict screen, same union/neg-key/deduce
+    tail — property-tested bit-identical to ``session_fold_answers`` on the
+    same updates) EXCEPT that ``rounds`` does not advance: seeding is capital
+    carried in from earlier queries, not a crowd round of this one."""
+    state, cmask = _apply_impl(state, seeds, count_round=False,
+                               keep_conflicts_published=False)
+    return _deduce_impl(state), cmask
+
+
+def _seed_labels_fast_flagged_impl(state: SessionState, seeds: jax.Array):
+    state, cmask, flag = _apply_fast_flagged_impl(
+        state, seeds, count_round=False, keep_conflicts_published=False)
+    return _deduce_impl(state), cmask, flag
+
+
 def _trust_graph_impl(state: SessionState, mask: jax.Array) -> SessionState:
     """Requery-ladder endpoint (DESIGN.md §9): pairs whose escalated answers
     kept conflicting are pulled out of flight and labeled by deduction —
@@ -1063,6 +1088,11 @@ _session_fold_jit = jax.jit(
     donate_argnums=(0,))
 _session_fold_batch_jit = _batched(_fold_impl, donate=True)
 _session_fold_fast_batch_jit = _batched(_fold_fast_flagged_impl)
+_session_seed_jit = jax.jit(_seed_labels_impl, donate_argnums=(0,))
+_session_seed_batch_jit = jax.jit(jax.vmap(_seed_labels_impl),
+                                  donate_argnums=(0,))
+_session_seed_fast_batch_jit = jax.jit(
+    jax.vmap(_seed_labels_fast_flagged_impl))
 _session_mark_published_jit = jax.jit(_mark_published_impl)
 _session_mark_published_batch_jit = jax.jit(jax.vmap(_mark_published_impl))
 _session_trust_graph_jit = jax.jit(_trust_graph_impl, donate_argnums=(0,))
@@ -1155,6 +1185,32 @@ def session_fold_answers_batch(state: SessionState, updates,
         return new_state, cmask
     engine_dispatches.add()
     return _session_fold_batch_jit(state, updates, keep_conflicts_published)
+
+
+def session_seed_labels(state: SessionState, seeds
+                        ) -> Tuple[SessionState, jax.Array]:
+    """Warm-start fold of cached cluster verdicts (DESIGN.md §14): one
+    dispatch applies + deduces the (P,) int32 ``seeds`` exactly like
+    ``session_fold_answers`` but WITHOUT advancing ``rounds`` — seeded
+    labels were paid for by an earlier query, not this session's crowd.
+    Returns ``(state, conflict_mask)``; contradictory seeds are rejected by
+    the §9 screen and flagged so the caller never counts them as hits.  The
+    input state is donated."""
+    engine_dispatches.add()
+    return _session_seed_jit(state, seeds)
+
+
+def session_seed_labels_batch(state: SessionState, seeds
+                              ) -> Tuple[SessionState, jax.Array]:
+    """Speculative-fast batched seed fold (see ``session_fold_answers_batch``):
+    the conflict-free common case is one parallel dispatch; the exact fold
+    re-runs only when a screen flag fired."""
+    engine_dispatches.add()
+    new_state, cmask, flags = _session_seed_fast_batch_jit(state, seeds)
+    if not bool(jnp.any(flags)):
+        return new_state, cmask
+    engine_dispatches.add()
+    return _session_seed_batch_jit(state, seeds)
 
 
 def session_mark_published(state: SessionState, mask) -> SessionState:

@@ -84,7 +84,8 @@ from repro.core.jax_graph import (
     session_deduce, session_fold_answers, session_fold_answers_batch,
     session_frontier, session_frontier_batch, session_grow,
     session_mark_published, session_mark_published_batch,
-    session_run_rounds_batch, session_trust_graph, session_trust_graph_batch)
+    session_run_rounds_batch, session_seed_labels, session_trust_graph,
+    session_trust_graph_batch)
 from repro.core.metrics import Quality, quality
 from repro.core.ordering import (session_gains, session_gains_batch,
                                  session_refresh_priorities,
@@ -95,15 +96,26 @@ from repro.core.sorting import get_order, validate_order
 
 @dataclasses.dataclass
 class JoinRequest:
-    rid: int
+    """One join submission. ``_admit`` is the single admission gate for every
+    construction path (``submit``, ``submit_embeddings``, the plan executor):
+    it resolves the ``None`` fields below to the service defaults, validates,
+    assigns the rid, and enqueues — so a request object built anywhere gets
+    identical treatment."""
+
+    rid: Optional[int]
     pairs: PairSet                 # machine-phase candidates
-    crowd: Crowd
-    order: str = "expected"
+    crowd: Optional[Crowd] = None  # None -> PerfectCrowd
+    order: Optional[str] = None    # None -> service default
     total_true_matches: Optional[int] = None
     # budget-aware scheduling (DESIGN.md §10): crowd spend is capped at
-    # budget_cents, priced per assignment; None = unlimited
+    # budget_cents, priced per assignment; None -> service default
     budget_cents: Optional[float] = None
     cost_per_assignment: Optional[float] = None
+    # cross-query warm start (DESIGN.md §14): (P,) int32 {UNKNOWN, NEG, POS}
+    # in the request's pair order — verdicts recovered from a ClusterCache.
+    # Seeded pairs fold into the session at lane open WITHOUT being posted to
+    # the gateway, so spend accounting never bills them.
+    seed_labels: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -131,6 +143,10 @@ class JoinSessionResult:
     # non-matching)
     n_spent_cents: float = 0.0
     stopped_on_budget: bool = False
+    # cross-query cache provenance (DESIGN.md §14): pairs resolved by seeded
+    # cluster verdicts at lane open — never posted, never billed.  Counted in
+    # neither ``crowdsourced`` nor the gateway spend.
+    n_cache_hits: int = 0
 
     @property
     def n_crowdsourced(self) -> int:
@@ -167,6 +183,8 @@ class _Lane:
     # screen drops the lane back to the exact per-round path for good)
     answers_host: Optional[np.ndarray] = None
     fused_ok: bool = True
+    # cross-query cache provenance (DESIGN.md §14)
+    n_cache_hits: int = 0
 
     @property
     def done(self) -> bool:
@@ -297,32 +315,56 @@ class JoinService:
         self._streams: Dict[int, "_EmbeddingStream"] = {}
 
     # -- request ingestion ---------------------------------------------------
+    def _admit(self, req: JoinRequest) -> int:
+        """Single admission gate for every submission path — ``submit``,
+        ``submit_embeddings``, and the plan executor (DESIGN.md §14) all
+        route through here instead of each carrying its own copy of the
+        validation/default plumbing.  Resolves ``None`` fields to the
+        service defaults, validates order and seed shape, screens rid
+        collisions (an explicit rid colliding with a queued or served
+        request is rejected — a silent overwrite would drop the earlier
+        result), and enqueues.  Returns the assigned rid."""
+        req.order = validate_order(self.order if req.order is None
+                                   else req.order)
+        if req.crowd is None:
+            req.crowd = PerfectCrowd()
+        if req.budget_cents is None:
+            req.budget_cents = self.budget_cents
+        if req.cost_per_assignment is None:
+            req.cost_per_assignment = self.cost_per_assignment
+        if req.seed_labels is not None and \
+                len(req.seed_labels) != len(req.pairs):
+            raise ValueError(
+                f"seed_labels length {len(req.seed_labels)} != pair count "
+                f"{len(req.pairs)} — seeds are per-pair verdicts in the "
+                "request's pair order")
+        if req.rid is None:
+            req.rid = self._next_rid
+        elif req.rid in self.results or \
+                any(r.rid == req.rid for r in self.queue):
+            raise ValueError(
+                f"duplicate join request rid {req.rid}: already "
+                f"{'served' if req.rid in self.results else 'queued'} — "
+                "pick a fresh rid (or omit it for an auto-assigned one)")
+        self._next_rid = max(self._next_rid, req.rid) + 1
+        self.queue.append(req)
+        return req.rid
+
     def submit(self, pairs: PairSet, crowd: Optional[Crowd] = None,
                order: Optional[str] = None, rid: Optional[int] = None,
                total_true_matches: Optional[int] = None,
                budget_cents: Optional[float] = None,
-               cost_per_assignment: Optional[float] = None) -> int:
+               cost_per_assignment: Optional[float] = None,
+               seed_labels: Optional[np.ndarray] = None) -> int:
         """Enqueue a join over pre-scored candidate pairs; returns the rid.
         ``order`` / ``budget_cents`` / ``cost_per_assignment`` default to the
-        service-level settings when omitted.  An explicit ``rid`` colliding
-        with a queued or served request is rejected — a silent overwrite
-        would drop the earlier result."""
-        order = validate_order(self.order if order is None else order)
-        if rid is None:
-            rid = self._next_rid
-        elif rid in self.results or any(r.rid == rid for r in self.queue):
-            raise ValueError(
-                f"duplicate join request rid {rid}: already "
-                f"{'served' if rid in self.results else 'queued'} — pick a "
-                "fresh rid (or omit it for an auto-assigned one)")
-        self._next_rid = max(self._next_rid, rid) + 1
-        self.queue.append(JoinRequest(
-            rid, pairs, crowd or PerfectCrowd(), order, total_true_matches,
-            budget_cents=self.budget_cents if budget_cents is None
-            else budget_cents,
-            cost_per_assignment=self.cost_per_assignment
-            if cost_per_assignment is None else cost_per_assignment))
-        return rid
+        service-level settings when omitted.  ``seed_labels`` warm-starts the
+        session from cached cross-query verdicts (DESIGN.md §14)."""
+        return self._admit(JoinRequest(
+            rid, pairs, crowd, order, total_true_matches,
+            budget_cents=budget_cents,
+            cost_per_assignment=cost_per_assignment,
+            seed_labels=seed_labels))
 
     @staticmethod
     def _check_candidate_overflow(cand) -> None:
@@ -413,10 +455,10 @@ class JoinService:
             truth=truth,
             n_objects=n_a + n_b,
         )
-        rid = self.submit(pairs, crowd, order,
-                          total_true_matches=total_true_matches,
-                          budget_cents=budget_cents,
-                          cost_per_assignment=cost_per_assignment)
+        rid = self._admit(JoinRequest(
+            None, pairs, crowd, order, total_true_matches,
+            budget_cents=budget_cents,
+            cost_per_assignment=cost_per_assignment))
         if streaming:
             self._streams[rid] = _EmbeddingStream(
                 index=index, truth_fn=truth_fn,
@@ -532,6 +574,21 @@ class JoinService:
             n_cap = ordered.n_objects
         state = make_session_state(ordered.u, ordered.v, ordered.n_objects,
                                   pair_capacity=p_cap, object_capacity=n_cap)
+        labels_host = np.full(P, UNKNOWN, np.int32)
+        n_cache_hits = 0
+        if req.seed_labels is not None:
+            # cross-query warm start (DESIGN.md §14): fold cached cluster
+            # verdicts before the first frontier, so seeded pairs (and
+            # whatever deduction reaches from them) never get crowdsourced.
+            # Seeds are never posted to the gateway — spend excludes them.
+            seeds = np.full(p_cap, UNKNOWN, np.int32)
+            seeds[:P] = np.asarray(req.seed_labels, np.int32)[perm]
+            if (seeds != UNKNOWN).any():
+                engine_dispatches.add()  # seed upload
+                state, cmask = session_seed_labels(state, jnp.asarray(seeds))
+                n_cache_hits = int(((seeds[:P] != UNKNOWN)
+                                    & ~np.asarray(cmask)[:P]).sum())
+                labels_host = np.asarray(state.labels)[:P]
         prior_host = np.zeros(p_cap, np.float32)
         prior_host[:P] = ordered.likelihood
         rate = (req.cost_per_assignment if req.cost_per_assignment is not None
@@ -543,7 +600,8 @@ class JoinService:
             ordered=ordered,
             p=P,
             state=state,
-            labels_host=np.full(P, UNKNOWN, np.int32),
+            labels_host=labels_host,
+            n_cache_hits=n_cache_hits,
             crowdsourced=np.zeros(P, bool),
             round_sizes=[],
             t0=time.perf_counter(),
@@ -682,6 +740,7 @@ class JoinService:
             n_requeried=lane.n_requeried,
             n_spent_cents=gateway.spent_cents(req.rid) if gateway else 0.0,
             stopped_on_budget=lane.budget_stopped,
+            n_cache_hits=lane.n_cache_hits,
         )
         self._streams.pop(req.rid, None)
         self._stream_interleave.pop(req.rid, None)

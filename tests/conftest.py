@@ -73,6 +73,7 @@ else:
 
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = _given
+    _hyp.assume = lambda *args, **kwargs: None
     _hyp.settings = _Settings
     _hyp.HealthCheck = _HealthCheck
     _hyp.strategies = _st

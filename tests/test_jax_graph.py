@@ -197,3 +197,111 @@ def test_pair_key_guard_x64_off_boundary():
     canonical_keys(r, r, n_ok)  # fine
     with pytest.raises(ValueError, match="overflows"):
         canonical_keys(r, r, n_bad)
+
+
+# ---------------------------------------------------------------------------
+# Cross-query warm start: session_seed_labels (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+_STATE_FIELDS = ("u", "v", "labels", "published", "roots", "neg_keys",
+                 "conflicts", "priority")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("noisy", [False, True])
+def test_session_seed_labels_bit_identical_to_fold(make_random_world, seed,
+                                                   noisy):
+    """Seeding cached verdicts must be EXACTLY replaying them through the
+    answer fold — every state field bit-for-bit, including the conflict
+    mask when the seeds contradict each other — except ``rounds``, which
+    seeding leaves alone (seeds are prior queries' capital, not a crowd
+    round of this session)."""
+    from repro.core import session_fold_answers, session_seed_labels
+
+    rng = np.random.default_rng(seed)
+    n, u, v, truth = make_random_world(rng)
+    m = len(u)
+    reveal = rng.random(m) < 0.6
+    seeds = np.where(reveal, truth, UNKNOWN).astype(np.int32)
+    if noisy:  # contradictory seeds exercise the §9 screen path
+        flip = rng.random(m) < 0.3
+        seeds = np.where(reveal & flip,
+                         np.where(seeds == POS, NEG, POS), seeds)
+    sa, ca = session_seed_labels(make_session_state(u, v, n),
+                                 jnp.asarray(seeds))
+    sb, cb = session_fold_answers(make_session_state(u, v, n),
+                                  jnp.asarray(seeds))
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+    for f in _STATE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(sa, f)),
+                                      np.asarray(getattr(sb, f)),
+                                      err_msg=f)
+    assert int(np.asarray(sa.rounds)) == 0
+    assert int(np.asarray(sb.rounds)) == 1
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_session_seed_labels_pad_preserving(make_random_world, seed):
+    """Seeding a capacity-padded state must leave the padded tail exactly as
+    the fold would: pads stay UNKNOWN/unpublished, real slots identical to
+    the unpadded run."""
+    from repro.core import next_pow2, session_fold_answers, session_seed_labels
+
+    rng = np.random.default_rng(seed)
+    n, u, v, truth = make_random_world(rng)
+    m = len(u)
+    p_cap, n_cap = next_pow2(2 * m), next_pow2(2 * n)
+    seeds = np.full(p_cap, UNKNOWN, np.int32)
+    reveal = rng.random(m) < 0.7
+    seeds[:m] = np.where(reveal, truth, UNKNOWN)
+    sa, ca = session_seed_labels(
+        make_session_state(u, v, n, pair_capacity=p_cap,
+                           object_capacity=n_cap), jnp.asarray(seeds))
+    sb, cb = session_fold_answers(
+        make_session_state(u, v, n, pair_capacity=p_cap,
+                           object_capacity=n_cap), jnp.asarray(seeds))
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+    for f in _STATE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(sa, f)),
+                                      np.asarray(getattr(sb, f)),
+                                      err_msg=f)
+    # padding is inert: real-slot results identical to the unpadded run,
+    # and padded slots never enter flight
+    su, _ = session_seed_labels(make_session_state(u, v, n),
+                                jnp.asarray(seeds[:m]))
+    np.testing.assert_array_equal(np.asarray(sa.labels)[:m],
+                                  np.asarray(su.labels))
+    assert not np.asarray(sa.published)[m:].any()
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_session_seed_labels_batch_matches_unbatched(make_random_world, seed):
+    """The vmapped seed fold (speculative fast path + exact fallback) must
+    reproduce the per-session transform bit-for-bit."""
+    import jax
+
+    from repro.core import session_seed_labels, session_seed_labels_batch
+
+    rng = np.random.default_rng(seed)
+    worlds = [make_random_world(rng) for _ in range(3)]
+    p_cap = max(len(w[1]) for w in worlds)
+    n_cap = max(w[0] for w in worlds)
+    states, seed_rows = [], []
+    for n, u, v, truth in worlds:
+        states.append(make_session_state(u, v, n, pair_capacity=p_cap,
+                                         object_capacity=n_cap))
+        s = np.full(p_cap, UNKNOWN, np.int32)
+        reveal = rng.random(len(u)) < 0.6
+        s[:len(u)] = np.where(reveal, truth, UNKNOWN)
+        seed_rows.append(s)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+    bs, bc = session_seed_labels_batch(stacked, jnp.asarray(seed_rows))
+    for b, (n, u, v, truth) in enumerate(worlds):
+        ss, cc = session_seed_labels(
+            make_session_state(u, v, n, pair_capacity=p_cap,
+                               object_capacity=n_cap),
+            jnp.asarray(seed_rows[b]))
+        np.testing.assert_array_equal(np.asarray(bc)[b], np.asarray(cc))
+        for f in _STATE_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(bs, f))[b],
+                np.asarray(getattr(ss, f)), err_msg=f"{f} (lane {b})")

@@ -1,0 +1,427 @@
+"""Plan layer + cross-query cluster cache (DESIGN.md §14).
+
+Covers the algebra/optimizer/executor stack, the ClusterCache, the
+JoinService seeded-submission path (warm starts under both serving
+disciplines), and the property that every optimizer rewrite is
+result-equivalent to the unoptimized plan on random worlds.
+"""
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import NEG, POS, UNKNOWN, PairSet, PerfectCrowd
+from repro.plan import (And, ClusterCache, Cmp, Collection, CrowdJoin,
+                        Filter, MultiJoin, Not, Or, PlanExecutor, Project,
+                        Scan, optimize, row_fingerprints)
+from repro.plan.algebra import conjuncts, leg
+from repro.serve.join_service import JoinService
+
+
+# ---------------------------------------------------------------------------
+# world builders
+# ---------------------------------------------------------------------------
+def _entities_from_pairs(n, u, v, truth):
+    """Ground-truth entity ids from a conftest random world: connected
+    components of the truth-POS pairs.  Consistent with every pair in the
+    world (any POS pair connects its endpoints; cross-component pairs are
+    therefore all NEG)."""
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b, t in zip(u, v, truth):
+        if t == POS:
+            ra, rb = find(int(a)), find(int(b))
+            if ra != rb:
+                parent[max(ra, rb)] = min(ra, rb)
+    return np.array([find(i) for i in range(n)])
+
+
+def _embed(entities, rng, dim=12, noise=0.03):
+    """Entity-centroid embeddings: same entity => nearly identical rows."""
+    cents = {e: rng.normal(size=dim) for e in np.unique(entities)}
+    emb = np.stack([cents[e] for e in entities])
+    return emb + noise * rng.normal(size=emb.shape)
+
+
+def _split_collections(entities, emb, rng, n_colls):
+    """Partition the object universe round-robin (after a shuffle) into
+    named collections with machine-readable attrs."""
+    perm = rng.permutation(len(entities))
+    colls = []
+    for i in range(n_colls):
+        rows = np.sort(perm[i::n_colls])
+        colls.append(Collection(
+            "abcde"[i], emb[rows],
+            attrs={"oid": rows.astype(np.int64),
+                   "g": (rows % 3).astype(np.int64)},
+            entities=entities[rows]))
+    return colls
+
+
+def _norm(e):
+    return e / np.maximum(np.linalg.norm(e, axis=1, keepdims=True), 1e-30)
+
+
+def _perfect_recall(colls, threshold):
+    """True iff every same-entity cross-collection pair clears the machine
+    threshold — the §6.4 assumption under which filter pushdown is exactly
+    result-preserving (a machine-phase miss is a machine-phase miss in both
+    plans only when no transitive chain through a filtered row exists)."""
+    for i in range(len(colls)):
+        for j in range(i + 1, len(colls)):
+            a, b = colls[i], colls[j]
+            sims = _norm(a.embeddings) @ _norm(b.embeddings).T
+            same = a.entities[:, None] == b.entities[None, :]
+            if (same & (sims < threshold)).any():
+                return False
+    return True
+
+
+def _world_collections(seed, n_colls, make_random_world):
+    rng = np.random.default_rng(seed)
+    n, u, v, truth = make_random_world(rng)
+    entities = _entities_from_pairs(n, u, v, truth)
+    emb = _embed(entities, rng)
+    return _split_collections(entities, emb, rng, n_colls)
+
+
+THRESHOLD = 0.8
+
+
+# ---------------------------------------------------------------------------
+# algebra
+# ---------------------------------------------------------------------------
+def test_predicates_and_leg_resolution():
+    rng = np.random.default_rng(0)
+    coll = Collection("t", rng.normal(size=(6, 4)),
+                      attrs={"x": np.arange(6), "y": np.arange(6) % 2})
+    plan = Filter(Cmp("t.x", "<", 4),
+                  Filter(Or(Cmp("t.y", "==", 0), Not(Cmp("t.x", ">=", 2))),
+                         Scan(coll)))
+    got = leg(plan)
+    assert got is not None
+    _, mask = got
+    np.testing.assert_array_equal(
+        mask, (np.arange(6) < 4) & ((np.arange(6) % 2 == 0)
+                                    | ~(np.arange(6) >= 2)))
+    assert plan.ordered_columns() == ("t.x", "t.y")
+    with pytest.raises(ValueError, match="unknown columns"):
+        Filter(Cmp("t.z", "==", 1), Scan(coll))
+    with pytest.raises(ValueError, match="unknown columns"):
+        Project(("t.z",), Scan(coll))
+
+
+def test_conjuncts_flatten_ands():
+    p = And(And(Cmp("a.x", "==", 1), Cmp("b.x", "==", 2)),
+            Cmp("a.y", "<", 3))
+    assert len(conjuncts(p)) == 3
+
+
+def test_row_fingerprints_content_keyed():
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(5, 8)).astype(np.float32)
+    fps = row_fingerprints(emb)
+    assert len(set(fps)) == 5
+    # same bytes, different position -> same fingerprint
+    assert row_fingerprints(emb[::-1]) == fps[::-1]
+
+
+# ---------------------------------------------------------------------------
+# optimizer rewrites (structural)
+# ---------------------------------------------------------------------------
+def test_pushdown_moves_single_collection_conjuncts(make_random_world):
+    a, b = _world_collections(0, 2, make_random_world)
+    plan = Filter(And(Cmp("a.g", "==", 0), Cmp("b.g", "<", 2)),
+                  CrowdJoin(Scan(a), Scan(b), THRESHOLD))
+    opt = optimize(plan)
+    # both conjuncts are single-collection: nothing remains above the join
+    assert isinstance(opt, CrowdJoin)
+    assert all(isinstance(kid, Filter) for kid in opt.children())
+
+
+def test_pushdown_keeps_cross_collection_residual(make_random_world):
+    a, b = _world_collections(1, 2, make_random_world)
+    cross = Cmp("a.g", "==", 0)
+    residual = Or(Cmp("a.g", "==", 1), Cmp("b.g", "==", 1))
+    plan = Filter(And(cross, residual),
+                  CrowdJoin(Scan(a), Scan(b), THRESHOLD))
+    opt = optimize(plan)
+    assert isinstance(opt, Filter)          # the Or spans both collections
+    assert opt.pred == residual
+    assert isinstance(opt.child, CrowdJoin)
+
+
+def test_flatten_nested_same_threshold_joins(make_random_world):
+    a, b, c = _world_collections(2, 3, make_random_world)
+    nested = CrowdJoin(CrowdJoin(Scan(a), Scan(b), THRESHOLD), Scan(c),
+                       THRESHOLD)
+    opt = optimize(nested)
+    assert isinstance(opt, MultiJoin)
+    assert len(opt.inputs) == 3
+    # different thresholds are different candidate rules: no flattening
+    mixed = CrowdJoin(CrowdJoin(Scan(a), Scan(b), 0.9), Scan(c), THRESHOLD)
+    assert isinstance(optimize(mixed), CrowdJoin)
+
+
+def test_join_order_deterministic(make_random_world):
+    colls = _world_collections(3, 3, make_random_world)
+    plan = MultiJoin([Scan(c) for c in colls], THRESHOLD)
+    o1 = optimize(plan, seed=7)
+    o2 = optimize(plan, seed=7)
+    assert [leg(k)[0].name for k in o1.inputs] \
+        == [leg(k)[0].name for k in o2.inputs]
+
+
+# ---------------------------------------------------------------------------
+# ClusterCache
+# ---------------------------------------------------------------------------
+def test_cluster_cache_seed_and_conflict_drop(tmp_path):
+    cache = ClusterCache()
+    cache.deposit(["f1", "f2", "f4"], ["f2", "f3", "f5"],
+                  np.array([POS, POS, NEG], np.int32))
+    seeds = cache.seed(["f1", "f4", "f1", "f9"], ["f3", "f5", "f5", "f1"])
+    np.testing.assert_array_equal(seeds, [POS, NEG, UNKNOWN, UNKNOWN])
+    assert cache.n_hits == 2 and cache.n_misses == 2
+    # later POS evidence merges the NEG edge's clusters: edge is dropped
+    cache.deposit(["f4"], ["f5"], np.array([POS], np.int32))
+    np.testing.assert_array_equal(cache.seed(["f4"], ["f5"]), [POS])
+    assert cache.n_neg_dropped == 1
+    # persistence round-trips verdicts exactly
+    path = tmp_path / "cache.json"
+    cache.save(str(path))
+    loaded = ClusterCache.load(str(path))
+    np.testing.assert_array_equal(
+        loaded.seed(["f1", "f4", "f9"], ["f3", "f5", "f1"]),
+        cache.seed(["f1", "f4", "f9"], ["f3", "f5", "f1"]))
+    assert loaded.n_clusters == cache.n_clusters
+
+
+def test_cluster_cache_union_order_invariant():
+    c1, c2 = ClusterCache(), ClusterCache()
+    c1.deposit(["a", "b"], ["b", "c"], np.array([POS, POS], np.int32))
+    c2.deposit(["b", "a"], ["c", "b"], np.array([POS, POS], np.int32))
+    assert c1._find("c") == c2._find("c") == "a"
+
+
+# ---------------------------------------------------------------------------
+# JoinService seeded-submission path (satellite: _admit + warm starts)
+# ---------------------------------------------------------------------------
+def _world_pairs(seed):
+    rng = np.random.default_rng(seed)
+    n = 14
+    ent = rng.integers(0, 4, n)
+    u, v = np.triu_indices(n, k=1)
+    keep = rng.random(len(u)) < 0.5
+    u, v = u[keep].astype(np.int32), v[keep].astype(np.int32)
+    truth = ent[u] == ent[v]
+    lik = np.clip(np.where(truth, 0.8, 0.2)
+                  + 0.1 * rng.standard_normal(len(u)), 0.01, 0.99)
+    return PairSet(u, v, lik.astype(np.float32), truth, n_objects=n)
+
+
+def test_admit_rejects_bad_seed_length():
+    svc = JoinService(lanes=1)
+    pairs = _world_pairs(0)
+    with pytest.raises(ValueError, match="seed_labels length"):
+        svc.submit(pairs, seed_labels=np.zeros(len(pairs) + 1, np.int32))
+
+
+def test_admit_rejects_duplicate_rid_from_embeddings_path():
+    """submit_embeddings routes through the same _admit gate as submit —
+    a colliding explicit rid is rejected with the same message."""
+    from repro.launch.mesh import make_host_mesh
+
+    svc = JoinService(lanes=1)
+    svc.submit(_world_pairs(1), rid=7)
+    with pytest.raises(ValueError, match="duplicate join request rid 7"):
+        svc.submit(_world_pairs(2), rid=7)
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(4, 8)).astype(np.float32)
+    rid = svc.submit_embeddings(emb, emb, 0.5, make_host_mesh(1, 1))
+    assert rid not in (7,)  # auto-assigned rids skip past explicit ones
+
+
+@pytest.mark.parametrize("async_mode", [False, True])
+def test_service_warm_start_identical_to_cold(async_mode):
+    """Seeding a second submit with the first run's verdicts crowdsources
+    nothing, bills nothing, and is label-for-label identical — under both
+    serving disciplines."""
+    pairs = _world_pairs(3)
+    cold = JoinService(lanes=2, async_mode=async_mode)
+    rid = cold.submit(pairs, PerfectCrowd())
+    res = cold.run()[rid]
+    assert res.n_crowdsourced > 0 and res.n_cache_hits == 0
+    seeds = np.where(res.labels, POS, NEG).astype(np.int32)
+    warm = JoinService(lanes=2, async_mode=async_mode)
+    wid = warm.submit(pairs, PerfectCrowd(), seed_labels=seeds)
+    wres = warm.run()[wid]
+    assert wres.n_crowdsourced == 0
+    assert wres.n_spent_cents == 0.0
+    assert wres.n_cache_hits == len(pairs)
+    np.testing.assert_array_equal(wres.labels, res.labels)
+
+
+@pytest.mark.parametrize("async_mode", [False, True])
+def test_service_partial_seed_crowdsources_only_novel(async_mode):
+    """Half-seeded submit: spend covers exactly the crowdsourced pairs (the
+    seeded ones are never posted, never billed), labels still match the
+    cold run."""
+    pairs = _world_pairs(4)
+    cold = JoinService(lanes=1, async_mode=async_mode)
+    rid = cold.submit(pairs, PerfectCrowd())
+    res = cold.run()[rid]
+    half = len(pairs) // 2
+    seeds = np.full(len(pairs), UNKNOWN, np.int32)
+    seeds[:half] = np.where(res.labels[:half], POS, NEG)
+    warm = JoinService(lanes=1, async_mode=async_mode)
+    wid = warm.submit(pairs, PerfectCrowd(), seed_labels=seeds)
+    wres = warm.run()[wid]
+    np.testing.assert_array_equal(wres.labels, res.labels)
+    assert wres.n_cache_hits == half
+    assert wres.n_crowdsourced < res.n_crowdsourced
+    # spend bills crowdsourced pairs only (PerfectCrowd = 1 assignment)
+    rate = warm.cost.cents_per_assignment
+    assert wres.n_spent_cents == pytest.approx(wres.n_crowdsourced * rate)
+
+
+# ---------------------------------------------------------------------------
+# executor + cache warm starts (satellite: both disciplines)
+# ---------------------------------------------------------------------------
+def _executor(cache=None, async_mode=False, optimize_plans=True):
+    return PlanExecutor(
+        service_factory=lambda: JoinService(lanes=2, async_mode=async_mode),
+        cache=cache, optimize_plans=optimize_plans)
+
+
+@pytest.mark.parametrize("async_mode", [False, True])
+def test_plan_warm_start_repeat_query(make_random_world, async_mode):
+    """Second execution of the same query over a shared cache crowdsources
+    ZERO pairs, spends zero cents, and reproduces the cold result
+    tuple-for-tuple, match-for-match, cluster-for-cluster."""
+    a, b, c = _world_collections(5, 3, make_random_world)
+    plan = MultiJoin([Scan(a), Scan(b), Scan(c)], THRESHOLD)
+    cache = ClusterCache()
+    cold = _executor(cache, async_mode).execute(plan)
+    warm = _executor(cache, async_mode).execute(plan)
+    assert cold.n_candidates > 0
+    assert warm.n_crowdsourced == 0
+    assert warm.spent_cents == 0.0
+    assert warm.n_cache_hits > 0
+    assert warm.signature() == cold.signature()
+    assert warm.matches == cold.matches
+    assert warm.clusters == cold.clusters
+
+
+@pytest.mark.parametrize("async_mode", [False, True])
+def test_plan_warm_start_grown_collection(make_random_world, async_mode):
+    """A later query over a GROWN collection crowdsources only pairs that
+    touch novel rows; overlapping pairs come from the cache."""
+    rng = np.random.default_rng(6)
+    n, u, v, truth = make_random_world(rng)
+    entities = _entities_from_pairs(n, u, v, truth)
+    emb = _embed(entities, rng)
+    a, b = _split_collections(entities, emb, rng, 2)
+    cache = ClusterCache()
+    first = _executor(cache, async_mode).execute(
+        CrowdJoin(Scan(a), Scan(b), THRESHOLD))
+    # grow b with fresh rows of existing entities
+    extra = rng.integers(0, max(entities) + 1, 3)
+    emb_extra = _embed(extra, rng)
+    b2 = Collection("b", np.concatenate([b.embeddings, emb_extra]),
+                    attrs={k: np.concatenate([val, np.arange(
+                        len(val), len(val) + 3)])
+                        for k, val in b.attrs.items()},
+                    entities=np.concatenate([b.entities, extra]))
+    plan2 = CrowdJoin(Scan(a), Scan(b2), THRESHOLD)
+    warm = _executor(cache, async_mode).execute(plan2)
+    coldref = _executor(ClusterCache(), async_mode).execute(plan2)
+    assert warm.signature() == coldref.signature()
+    assert warm.matches == coldref.matches
+    # only pairs touching the 3 novel rows may be crowdsourced
+    old_fps = set(a.fingerprints()) | set(b.fingerprints())
+    if coldref.n_crowdsourced:
+        assert warm.n_crowdsourced < coldref.n_crowdsourced
+    new_fps = set(b2.fingerprints()) - old_fps
+    assert len(new_fps) == 3
+    assert warm.n_crowdsourced <= _max_novel_pairs(a, b2, new_fps)
+
+
+def _max_novel_pairs(a, b2, new_fps):
+    sims = _norm(a.embeddings) @ _norm(b2.embeddings).T
+    cand = np.argwhere(sims >= THRESHOLD)
+    fps_a, fps_b = a.fingerprints(), b2.fingerprints()
+    return sum(1 for i, j in cand
+               if fps_a[i] in new_fps or fps_b[j] in new_fps)
+
+
+def test_plan_spend_excludes_cache_avoided_pairs(make_random_world):
+    """Budget/spend accounting never bills avoided pairs: warm-run spend is
+    exactly crowdsourced x rate, with zero contribution from cache hits."""
+    for seed in range(7, 20):  # first world whose join does crowd work
+        a, b = _world_collections(seed, 2, make_random_world)
+        plan = CrowdJoin(Scan(a), Scan(b), THRESHOLD)
+        cache = ClusterCache()
+        cold = _executor(cache).execute(plan)
+        if cold.n_crowdsourced > 0:
+            break
+    assert cold.n_crowdsourced > 0
+    assert cold.spent_cents == pytest.approx(cold.n_crowdsourced * 2.0)
+    warm = _executor(cache).execute(plan)
+    assert warm.n_cache_hits > 0 and warm.spent_cents == 0.0
+
+
+# ---------------------------------------------------------------------------
+# property: optimizer rewrites are result-equivalent (satellite)
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_colls=st.integers(2, 3),
+       which=st.integers(0, 2))
+def test_optimizer_rewrites_result_equivalent(make_random_world, seed,
+                                              n_colls, which):
+    """Filter pushdown + join reordering on random conftest worlds: the
+    optimized plan's observable result (columns + tuples) equals the
+    unoptimized plan's, while never scoring more candidates.  Guarded by
+    the machine-recall assumption (every same-entity cross pair clears the
+    threshold) under which pushdown is exactly result-preserving."""
+    colls = _world_collections(seed, n_colls, make_random_world)
+    assume(all(len(c) >= 2 for c in colls))
+    assume(_perfect_recall(colls, THRESHOLD))
+    names = [c.name for c in colls]
+    preds = [Cmp(f"{names[0]}.g", "==", 0),
+             And(Cmp(f"{names[0]}.g", "<", 2),
+                 Cmp(f"{names[-1]}.g", ">=", 1)),
+             Or(Cmp(f"{names[0]}.g", "==", 1),
+                Cmp(f"{names[-1]}.g", "==", 1))]
+    join = MultiJoin([Scan(c) for c in colls], THRESHOLD) \
+        if n_colls > 2 else CrowdJoin(Scan(colls[0]), Scan(colls[1]),
+                                      THRESHOLD)
+    plan = Filter(preds[which], join)
+    unopt = _executor(optimize_plans=False).execute(plan)
+    opt = _executor(optimize_plans=True).execute(plan)
+    assert opt.signature() == unopt.signature()
+    assert opt.n_candidates <= unopt.n_candidates
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_join_reorder_result_equivalent(make_random_world, seed):
+    """Every leg order of a MultiJoin produces the same observable result —
+    the accumulated-universe candidate set is order-invariant, only the
+    crowd cost moves (no recall assumption needed)."""
+    colls = _world_collections(seed, 3, make_random_world)
+    assume(all(len(c) >= 2 for c in colls))
+    base = None
+    for order in ([0, 1, 2], [2, 0, 1], [1, 2, 0]):
+        plan = MultiJoin([Scan(colls[i]) for i in order], THRESHOLD)
+        res = _executor(optimize_plans=False).execute(plan)
+        sig = (tuple(sorted(res.matches)),
+               frozenset(c for c in res.clusters if len(c) > 1))
+        if base is None:
+            base = sig
+        else:
+            assert sig == base
