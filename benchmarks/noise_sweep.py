@@ -75,5 +75,77 @@ def run() -> list:
                 f"R={cell['recall']:.2f} conflicts={cell['n_conflicts']} "
                 f"requeried={cell['n_requeried']} "
                 f"consistent={cell['consistent']}"))
+    out.extend(_worker_quality(payload))
     out.append("# JSON " + json.dumps({"noise_sweep": payload}))
+    return out
+
+
+def _worker_quality(payload: dict) -> list:
+    """The DESIGN.md §15 worker-quality stage on the Cora-like benchmark.
+
+    Three serving configurations over one heterogeneous worker pool
+    (Beta-distributed per-worker error rates), all billed at the same
+    HIT-amortized per-assignment rate the PR 8 ``BENCH_join.json``
+    snapshot's ``crowd_cents_per_resolved_pair`` uses (a 20-pair HIT at 3
+    assignments costs 6 cents, so one pair-vote quantum costs
+    ``cents_per_assignment / pairs_per_hit``; cluster tasks are priced by
+    object count at the same quantum rate — the Marcus-et-al batching
+    factor applies to every microtask, not just pair votes):
+
+    * ``majority`` — pair ballots, naive majority (the PR 4/PR 8 crowd);
+    * ``em`` — pair ballots, streaming Dawid–Skene aggregation, equal
+      assignments (so equal spend) — quality must not drop;
+    * ``mixed`` — EM aggregation plus cluster tasks chosen per round by
+      the §15 information-per-cent rule — must report a lower
+      cents-per-resolved-pair than both the majority baseline and the
+      PR 8 snapshot value, at no-worse quality.
+
+    The CI bench-smoke step asserts all of that from the JSON payload.
+    """
+    from repro.core import CostModel, NoisyCrowd
+    from repro.data.entities import make_paper_dataset
+    from repro.serve.join_service import JoinService
+
+    cost = CostModel()
+    quantum = cost.cents_per_assignment / cost.pairs_per_hit
+    n_records = 400 if _tiny() else 997
+    ds = make_paper_dataset(seed=0, n_records=n_records)
+    pairs = ds.pairs.above(0.3)
+
+    def crowd():
+        return NoisyCrowd(error_rate=0.1, n_assignments=3, seed=7,
+                          n_workers=30, worker_concentration=3.0,
+                          qualification=False)
+
+    configs = [
+        ("majority", {}),
+        ("em", {"aggregation": "em"}),
+        ("mixed", {"aggregation": "em", "cluster_tasks": True,
+                   "cluster_size": 8}),
+    ]
+    out: list = []
+    wq: dict = {"n_records": n_records, "n_pairs": len(pairs),
+                "quantum_cents": quantum}
+    for name, kw in configs:
+        svc = JoinService(lanes=1, **kw)
+        rid = svc.submit(pairs, crowd(), cost_per_assignment=quantum,
+                         total_true_matches=ds.total_true_matches)
+        t0 = time.perf_counter()
+        res = svc.run()[rid]
+        secs = time.perf_counter() - t0
+        wq[name] = {
+            "f_measure": res.quality.f_measure,
+            "n_crowdsourced": res.n_crowdsourced,
+            "n_cluster_tasks": res.n_cluster_tasks,
+            "n_cluster_pairs": res.n_cluster_pairs,
+            "spent_cents": res.n_spent_cents,
+            "cents_per_resolved_pair": res.n_spent_cents / len(pairs),
+        }
+        out.append(row(
+            f"noise_sweep/worker_quality_{name}", secs * 1e6,
+            f"F={res.quality.f_measure:.4f} "
+            f"crowdsourced={res.n_crowdsourced} "
+            f"ctasks={res.n_cluster_tasks} "
+            f"cpp={wq[name]['cents_per_resolved_pair']:.5f}"))
+    payload["worker_quality"] = wq
     return out

@@ -43,6 +43,15 @@ def _trajectory(payloads: dict) -> dict:
         traj["crowd_cents_per_resolved_pair"] = \
             svc["human"]["cents_per_resolved_pair"]
         traj["crowd_saved_frac"] = svc["human"]["saved_frac"]
+    noise = payloads.get("noise_sweep", {})
+    if "worker_quality" in noise:  # §15 worker-quality + cluster-task stage
+        wq = noise["worker_quality"]
+        traj["crowd_cents_per_resolved_pair_mixed"] = \
+            wq["mixed"]["cents_per_resolved_pair"]
+        traj["crowd_cents_per_resolved_pair_majority"] = \
+            wq["majority"]["cents_per_resolved_pair"]
+        traj["worker_quality_f_em"] = wq["em"]["f_measure"]
+        traj["worker_quality_f_majority"] = wq["majority"]["f_measure"]
     plan = payloads.get("bench_plan", {})
     if "repeat" in plan:  # §14 plan layer + cluster cache headline numbers
         traj["plan_repeat_saved_frac"] = plan["repeat"]["saved_frac"]

@@ -75,6 +75,28 @@ def main():
     if res.quality:
         print(f"[quality] {res.quality.row()}")
 
+    # ---- §15 serving: per-worker reliability + cluster tasks ---------------
+    # the same candidates through the serving layer, over a heterogeneous
+    # worker pool: EM aggregation learns who to trust, and mixed scheduling
+    # posts multi-pair cluster tasks whenever they beat the pair rate
+    from repro.serve.join_service import JoinService
+
+    def pool():
+        return NoisyCrowd(error_rate=0.1, n_assignments=3, seed=1,
+                          n_workers=25, worker_concentration=3.0,
+                          qualification=False)
+
+    for tag, kw in (("majority pairs", {}),
+                    ("em + clusters", {"aggregation": "em",
+                                       "cluster_tasks": True})):
+        svc = JoinService(lanes=1, **kw)
+        rid = svc.submit(cand, pool(), total_true_matches=int(truth.sum()))
+        r = svc.run()[rid]
+        print(f"[serve]   {tag:14s} F={r.quality.f_measure:.3f} "
+              f"spent={r.n_spent_cents:.0f}c "
+              f"cluster_tasks={r.n_cluster_tasks} "
+              f"cluster_pairs={r.n_cluster_pairs}")
+
     # ---- wall-clock: Parallel(ID) vs Non-Parallel on the AMT simulator -----
     order = get_order(cand, "expected")
     cost, lat = CostModel(), LatencyModel(n_workers=20)

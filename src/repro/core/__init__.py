@@ -3,8 +3,9 @@ crowdsourcing labeling framework (ClusterGraph deduction, labeling orders,
 parallel labeling) — exact sequential oracle plus the TPU-native JAX engine.
 """
 from .cluster_graph import ClusterGraph, MATCH, NON_MATCH
-from .crowd import (CostModel, Crowd, CrowdAnswer, CrowdGateway, CrowdTicket,
-                    LatencyModel, NoisyCrowd, PerfectCrowd)
+from .crowd import (Ballot, ClusterTask, CostModel, Crowd, CrowdAnswer,
+                    CrowdGateway, CrowdTicket, LatencyModel, NoisyCrowd,
+                    PerfectCrowd, WorkerModel)
 from .deduce import deduce_bruteforce
 from .jax_graph import (NEG, POS, ROUNDS_CONFLICT, ROUNDS_DONE, ROUNDS_EMPTY,
                         ROUNDS_RUNNING, UNKNOWN, SessionState,
@@ -49,6 +50,7 @@ from .sorting import (ORDERS, count_crowdsourced, expected_crowdsourced,
 __all__ = [
     "ClusterGraph", "MATCH", "NON_MATCH", "PairSet",
     "Crowd", "PerfectCrowd", "NoisyCrowd", "CostModel", "LatencyModel",
+    "Ballot", "ClusterTask", "WorkerModel",
     "deduce_bruteforce",
     "label_sequential", "label_all_crowdsourced", "label_parallel",
     "LabelingResult", "parallel_crowdsourced_pairs", "deduction_sweep",

@@ -1167,6 +1167,14 @@ def session_fold_answers(state: SessionState, updates,
                          keep_conflicts_published: bool = False
                          ) -> Tuple[SessionState, jax.Array]:
     """apply_answers + deduce fused into a single device dispatch.
+
+    The fold is agnostic to where an answer came from: per-pair ballots,
+    requery escalations, and agreed cluster-task verdicts (DESIGN.md §15)
+    all arrive as the same (P,) engine-encoded update vector and pass
+    through the same conflict screen — which is exactly why cluster-task
+    decoding is conflict-screen-identical to submitting the covered pairs
+    individually (property-tested in tests/test_crowd.py).
+
     Returns ``(state, conflict_mask)``."""
     engine_dispatches.add()
     return _session_fold_jit(state, updates, keep_conflicts_published)

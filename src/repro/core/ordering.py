@@ -46,6 +46,14 @@ paths produce bit-identical scores and therefore identical rankings.
 With no negative evidence yet (round 1) the gain reduces to the clipped
 prior, so adaptive ordering starts as the §4.2 likelihood-descending
 heuristic and diverges only once structure accumulates.
+
+The ordering also steers mixed scheduling (DESIGN.md §15): the cluster-task
+planner grows its multi-pair tasks around the objects of the
+frontier-selected pairs and values a candidate task only by the *frontier*
+pairs it covers — harvested off-frontier pairs ride along at zero credited
+value, since deduction would have labeled most of them for free.  A better
+frontier therefore concentrates cluster tasks where the next round's
+information actually is.
 """
 from __future__ import annotations
 

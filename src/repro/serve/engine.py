@@ -43,8 +43,11 @@ class ServeEngine:
 
         # whole-wave greedy decode in one dispatch (DESIGN.md §13): the
         # per-token host loop (steps round trips, cache re-uploaded each
-        # time) becomes a lax.scan with the cache donated — it stays
-        # device-resident and is updated in place across all steps
+        # time) becomes a lax.scan — the cache stays device-resident inside
+        # the scan carry across all steps.  The final cache is not an
+        # output (only the tokens are), so there is nothing for a donated
+        # input to alias into: donate_argnums here would be a no-op that
+        # just trips XLA's unusable-donation warning.
         def _decode_loop(p, cache, cur, steps):
             def step(carry, _):
                 cache, cur = carry
@@ -56,8 +59,7 @@ class ServeEngine:
                                             length=steps)
             return toks  # (steps, B): tokens emitted after ``cur``
 
-        self._decode_loop = jax.jit(_decode_loop, static_argnums=(3,),
-                                    donate_argnums=(1,))
+        self._decode_loop = jax.jit(_decode_loop, static_argnums=(3,))
 
     def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Processes requests in lane-sized waves (prefill batch, then decode
@@ -80,7 +82,7 @@ class ServeEngine:
         if steps <= 0:
             return {r.rid: [] for r in wave}
         # the wave emits cur, then steps-1 scanned continuations — one
-        # decode dispatch total, cache donated into the scan
+        # decode dispatch total, cache carried device-side through the scan
         if steps > 1:
             nxt = self._decode_loop(self.params, cache, cur, steps - 1)
             emitted = np.concatenate([np.asarray(cur)[None],

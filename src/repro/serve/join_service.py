@@ -120,6 +120,20 @@ class JoinRequest:
 
 @dataclasses.dataclass
 class JoinSessionResult:
+    """Served outcome of one join request.
+
+    Carries the decoded labels (request pair order), which pairs the crowd
+    answered vs the graph deduced, round/cost/latency accounting, and the
+    §9/§10/§14/§15 provenance counters.  Retrieved from
+    ``JoinService.run()``'s ``{rid: result}`` map.
+
+    Example::
+
+        >>> res = service.run()[rid]
+        >>> res.n_crowdsourced + res.n_deduced == len(res.labels)
+        True
+    """
+
     rid: int
     labels: np.ndarray             # (P,) bool over the request's pairs
     crowdsourced: np.ndarray       # (P,) bool
@@ -147,13 +161,24 @@ class JoinSessionResult:
     # cluster verdicts at lane open — never posted, never billed.  Counted in
     # neither ``crowdsourced`` nor the gateway spend.
     n_cache_hits: int = 0
+    # multi-pair task accounting (DESIGN.md §15): cluster tasks posted for
+    # this request; their decoded pair verdicts are counted in
+    # ``crowdsourced`` like any other answer.  ``n_cluster_pairs`` is the
+    # subset of ``crowdsourced`` resolved by agreed cluster verdicts
+    # (disagreements escalated to pair ballots are excluded), and
+    # ``n_cluster_cents`` the total cluster-task spend at the §15 price
+    n_cluster_tasks: int = 0
+    n_cluster_pairs: int = 0
+    n_cluster_cents: float = 0.0
 
     @property
     def n_crowdsourced(self) -> int:
+        """Pairs answered by the crowd (pair tasks + cluster verdicts)."""
         return int(self.crowdsourced.sum())
 
     @property
     def n_deduced(self) -> int:
+        """Pairs labeled by transitive deduction instead of the crowd."""
         return len(self.labels) - self.n_crowdsourced
 
 
@@ -185,6 +210,12 @@ class _Lane:
     fused_ok: bool = True
     # cross-query cache provenance (DESIGN.md §14)
     n_cache_hits: int = 0
+    # cluster-task scheduling (DESIGN.md §15): host mirror of which ordered
+    # pair slots have an unanswered gateway task out (pair or cluster) —
+    # the harvest planner must not cover a pair twice
+    inflight_host: Optional[np.ndarray] = None
+    n_cluster_tasks: int = 0
+    n_cluster_cents: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -255,6 +286,26 @@ class JoinService:
     budget and resolves remaining pairs by trusting the graph;
     ``slots_per_round`` caps the crowd questions posted per round-barrier
     round across ALL lanes, allocated by marginal expected-deduction gain.
+
+    Worker quality + cluster tasks (DESIGN.md §15): ``aggregation="em"``
+    makes the gateway collapse ballots by reliability-weighted voting (a
+    streaming Dawid–Skene :class:`~repro.core.crowd.WorkerModel`) instead
+    of naive majority; ``cluster_tasks=True`` lets the scheduler post
+    CrowdER-style multi-pair tasks — up to ``cluster_size`` objects
+    partitioned by ``cluster_assignments`` distinct workers, agreed
+    verdicts landing and disagreements escalating to pair ballots —
+    whenever a task's expected correct labels
+    per cent beat the pair-task rate.  Cluster tasks compose with budgets,
+    the slot allocator and both serving disciplines; the fused megabatch
+    path (§13) stands down while they are enabled, since a cluster task's
+    harvest set depends on live host-side coverage.
+
+    Example::
+
+        >>> service = JoinService(lanes=2, aggregation="em",
+        ...                       cluster_tasks=True, cluster_size=8)
+        >>> rid = service.submit(pairs, crowd=NoisyCrowd(n_workers=25))
+        >>> result = service.run()[rid]
     """
 
     def __init__(self, lanes: int = 4, cost: Optional[CostModel] = None,
@@ -264,7 +315,10 @@ class JoinService:
                  budget_cents: Optional[float] = None,
                  cost_per_assignment: Optional[float] = None,
                  slots_per_round: Optional[int] = None,
-                 fused_rounds: bool = True):
+                 fused_rounds: bool = True,
+                 aggregation: str = "majority",
+                 cluster_tasks: bool = False, cluster_size: int = 8,
+                 cluster_assignments: int = 2):
         if conflict_policy not in ("drop", "requery"):
             raise ValueError(
                 f"conflict_policy must be 'drop' or 'requery', "
@@ -278,6 +332,18 @@ class JoinService:
             raise ValueError(
                 f"slots_per_round must be positive, got {slots_per_round} — "
                 "a zero-slot round could never make progress")
+        if aggregation not in ("majority", "em"):
+            raise ValueError(
+                f"aggregation must be 'majority' or 'em', got "
+                f"{aggregation!r}")
+        if cluster_size < 3:
+            raise ValueError(
+                f"cluster_size must be at least 3, got {cluster_size} — a "
+                "2-object task is just a pair question at cluster pricing")
+        if cluster_assignments < 1:
+            raise ValueError(
+                f"cluster_assignments must be positive, "
+                f"got {cluster_assignments}")
         self.lanes = lanes
         self.cost = cost or CostModel()
         self.latency = latency
@@ -288,6 +354,10 @@ class JoinService:
         self.budget_cents = budget_cents
         self.cost_per_assignment = cost_per_assignment
         self.slots_per_round = slots_per_round
+        self.aggregation = aggregation
+        self.cluster_tasks = cluster_tasks
+        self.cluster_size = cluster_size
+        self.cluster_assignments = cluster_assignments
         # on-device round engine (DESIGN.md §13): when every active lane's
         # crowd wave can be simulated on device (order-independent answers,
         # immediate transport, no budget/slot caps), one megabatch dispatch
@@ -613,6 +683,7 @@ class JoinService:
             * getattr(req.crowd, "n_assignments", 1),
             budget_cents=req.budget_cents,
             answers_host=req.crowd.precomputed_answers(ordered),
+            inflight_host=np.zeros(p_cap, bool),
         )
 
     # -- lane growth (DESIGN.md §11) -----------------------------------------
@@ -688,6 +759,9 @@ class JoinService:
              np.full(len(new_pairs), UNKNOWN, np.int32)])
         lane.crowdsourced = np.concatenate(
             [lane.crowdsourced, np.zeros(len(new_pairs), bool)])
+        inflight = np.zeros(p_cap, bool)
+        inflight[:len(lane.inflight_host)] = lane.inflight_host
+        lane.inflight_host = inflight
         lane.p = new_p
         lane.answers_host = req.crowd.precomputed_answers(lane.ordered)
 
@@ -741,6 +815,9 @@ class JoinService:
             n_spent_cents=gateway.spent_cents(req.rid) if gateway else 0.0,
             stopped_on_budget=lane.budget_stopped,
             n_cache_hits=lane.n_cache_hits,
+            n_cluster_tasks=lane.n_cluster_tasks,
+            n_cluster_pairs=gateway.cluster_pairs(req.rid) if gateway else 0,
+            n_cluster_cents=lane.n_cluster_cents,
         )
         self._streams.pop(req.rid, None)
         self._stream_interleave.pop(req.rid, None)
@@ -857,6 +934,141 @@ class JoinService:
         lane.labels_host = np.asarray(lane.state.labels)[:lane.p]
         lane.budget_stopped = True
 
+    # -- cluster-task scheduling (DESIGN.md §15) -----------------------------
+    def _task_info(self, lane: _Lane,
+                   gateway: CrowdGateway) -> Tuple[float, float]:
+        """Accuracy inputs of the §15 information-per-cent rule: the
+        expected accuracy of an *agreed* cluster verdict (the reliability
+        model's best-known worker error when EM aggregation has history,
+        else the crowd's base rate, raised to the ``cluster_assignments``
+        agreement power — all partitioning workers must coherently err for
+        a wrong verdict to land) and the expected correct labels per cent
+        of a pair task (majority-vote accuracy over ``n_assignments``
+        votes)."""
+        crowd = lane.req.crowd
+        k = getattr(crowd, "n_assignments", 1)
+        pair_cents = max(lane.rate_cents * k, 1e-9)
+        try:
+            acc_pair = 1.0 - crowd.pair_error_rate()
+        except AttributeError:
+            acc_pair = 1.0
+        wm = gateway.worker_model
+        best = wm.best_workers(limit=1) if wm is not None else []
+        if best:
+            err_one = wm.error_rate(best[0])
+        else:
+            err_one = min(getattr(crowd, "error_rate", 0.0), 0.5)
+        acc_task = 1.0 - err_one ** self.cluster_assignments
+        return acc_task, acc_pair / pair_cents
+
+    def _plan_tasks(self, lane: _Lane, idx: np.ndarray,
+                    gateway: CrowdGateway):
+        """Split a lane's allocated frontier into cluster tasks and leftover
+        pair tasks (DESIGN.md §15).  Around each frontier pair, greedily
+        grow an object set (up to ``cluster_size``) that maximizes covered
+        *frontier* pairs — the questions the engine actually scheduled this
+        round; every other pending pair inside the set rides along as free
+        harvest (the CrowdER effect: a partition answers all its internal
+        pairs at one task price).  The task posts iff its expected correct
+        scheduled labels per cent, ``acc_one * frontier_covered /
+        task_cents``, beats the pair-task rate ``acc_pair / pair_cents``
+        (and, for budgeted lanes, the remaining budget affords it) —
+        valuing only frontier coverage keeps the scheduler honest about
+        transitivity: harvested pairs deduction would have labeled for free
+        are not counted as value.  Returns ``(clusters, pair_idx)`` where
+        clusters is a list of ``(n_objects, covered_indices)``."""
+        idx = np.asarray(idx, int)
+        if not self.cluster_tasks or len(idx) == 0:
+            return [], idx
+        p = lane.p
+        pending = lane.labels_host == UNKNOWN
+        pending &= ~lane.inflight_host[:p]
+        u = np.asarray(lane.ordered.u)
+        v = np.asarray(lane.ordered.v)
+        acc_one, pair_info = self._task_info(lane, gateway)
+        is_frontier = np.zeros(p, bool)
+        is_frontier[idx] = True
+        nbr: Dict[int, List[int]] = {}
+        for j in np.nonzero(pending)[0]:
+            nbr.setdefault(int(u[j]), []).append(int(j))
+            nbr.setdefault(int(v[j]), []).append(int(j))
+        taken = np.zeros(p, bool)
+        budget = lane.budget_cents
+        spent = gateway.spent_cents(lane.req.rid) if budget is not None \
+            else 0.0
+        planned = 0.0
+        clusters: List[Tuple[int, np.ndarray]] = []
+        pair_idx: List[int] = []
+        for j in (int(i) for i in idx):
+            if taken[j]:
+                continue  # harvested by an earlier cluster this round
+            objs = {int(u[j]), int(v[j])}
+            while len(objs) < self.cluster_size:
+                # gain = (frontier pairs, pending pairs) object o would add
+                gain: Dict[int, List[int]] = {}
+                for o in objs:
+                    for q in nbr.get(o, ()):
+                        if taken[q]:
+                            continue
+                        other = int(v[q]) if int(u[q]) == o else int(u[q])
+                        if other not in objs:
+                            g = gain.setdefault(other, [0, 0])
+                            g[0] += int(is_frontier[q])
+                            g[1] += 1
+                if not gain:
+                    break
+                best = max(gain.items(),
+                           key=lambda kv: (kv[1][0], kv[1][1], -kv[0]))
+                if best[1][0] == 0 and len(objs) >= 3:
+                    # no scheduled question left to batch: stop growing so
+                    # the task price stays matched to its frontier value
+                    break
+                objs.add(best[0])
+            cov = sorted({q for o in objs for q in nbr.get(o, ())
+                          if not taken[q]
+                          and int(u[q]) in objs and int(v[q]) in objs})
+            fcov = int(sum(is_frontier[q] for q in cov))
+            cents = (self.cost.cluster_task_cents(len(objs), lane.rate_cents)
+                     * self.cluster_assignments)
+            ok = (acc_one * fcov / max(cents, 1e-9) >= pair_info
+                  and (budget is None
+                       or spent + planned + cents <= budget + 1e-9))
+            if ok:
+                cov = np.asarray(cov, int)
+                taken[cov] = True
+                planned += cents
+                clusters.append((len(objs), cov))
+            else:
+                pair_idx.append(j)
+        return clusters, np.asarray(pair_idx, int)
+
+    def _post_lane(self, lane: _Lane, clusters, pair_idx: np.ndarray,
+                   gateway: CrowdGateway) -> int:
+        """Post one lane's planned round: every cluster task, then the
+        leftover pair batch.  Marks coverage (``crowdsourced``,
+        ``inflight_host``) and bills cluster tasks at their §15 task price.
+        Returns the total pairs posted."""
+        total = 0
+        for n_objects, cov in clusters:
+            lane.crowdsourced[cov] = True
+            lane.inflight_host[cov] = True
+            cents = (self.cost.cluster_task_cents(n_objects, lane.rate_cents)
+                     * self.cluster_assignments)
+            gateway.post_cluster(
+                lane.req.rid, lane.ordered, cov, lane.req.crowd,
+                cents=cents, n_assignments=self.cluster_assignments,
+                pair_cents_per_assignment=lane.rate_cents)
+            lane.n_cluster_tasks += 1
+            lane.n_cluster_cents += cents
+            total += len(cov)
+        if len(pair_idx):
+            lane.crowdsourced[pair_idx] = True
+            lane.inflight_host[pair_idx] = True
+            gateway.post(lane.req.rid, lane.ordered, pair_idx, lane.req.crowd,
+                         cents_per_assignment=lane.rate_cents)
+            total += len(pair_idx)
+        return total
+
     # -- on-device round engine (DESIGN.md §13) ------------------------------
     # rounds folded per megabatch dispatch; static so every wave shares one
     # jit cache entry per capacity bucket
@@ -868,9 +1080,13 @@ class JoinService:
         transport immediate (a latency model makes answer arrival part of
         the semantics), budgets/slot caps unconstrained (they re-decide per
         round on host), no arrival epochs pending (they grow the state
-        mid-wave), and no prior §9 conflict on this lane (the exact replay
-        is host-driven)."""
+        mid-wave), no prior §9 conflict on this lane (the exact replay
+        is host-driven), and cluster tasks disabled — a cluster task's
+        harvest set depends on live host-side coverage (§15), which the
+        device wave cannot consult, so mixed scheduling falls back to the
+        exact per-round paths."""
         return (self.fused_rounds
+                and not self.cluster_tasks
                 and self.latency is None
                 and self.slots_per_round is None
                 and lane.budget_cents is None
@@ -983,8 +1199,26 @@ class JoinService:
                     stacked, self._group_priors(key, lanes),
                     np.array([l.adaptive for l in lanes]))
             frontier = np.asarray(session_frontier_batch(stacked))
+            if self.cluster_tasks:
+                # the harvest planner widens the posted mask in place
+                frontier = np.array(frontier)
             staged.append([key, lanes, stacked, frontier])
         budget_stops = self._allocate(staged, gateway)
+        # cluster-task planning (DESIGN.md §15): split each lane's allocated
+        # frontier into cluster harvests + leftover pairs, and widen the
+        # posted mask with the harvested extras so the publish below gates
+        # deduction off every pair with an answer inbound
+        plans: Dict[Tuple[int, int], Tuple[list, np.ndarray]] = {}
+        for si, stage in enumerate(staged):
+            _, lanes, _, posted = stage
+            for b, lane in enumerate(lanes):
+                idx = np.nonzero(posted[b])[0]
+                if len(idx) == 0:
+                    continue
+                clusters, pair_idx = self._plan_tasks(lane, idx, gateway)
+                plans[(si, b)] = (clusters, pair_idx)
+                for _, cov in clusters:
+                    posted[b, cov] = True
         for stage in staged:
             key, lanes, stacked, posted = stage
             if requery and posted.any():
@@ -995,15 +1229,14 @@ class JoinService:
                     stacked, jnp.asarray(posted))
                 stage[2] = stacked
         # post every lane's allocation, then drain: the barrier spans lanes
-        for _, lanes, _, posted in staged:
+        for si, (_, lanes, _, posted) in enumerate(staged):
             for b, lane in enumerate(lanes):
-                idx = np.nonzero(posted[b])[0]
-                if len(idx) == 0:
+                plan = plans.get((si, b))
+                if plan is None:
                     continue
-                lane.round_sizes.append(len(idx))
-                lane.crowdsourced[idx] = True
-                gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd,
-                             cents_per_assignment=lane.rate_cents)
+                n = self._post_lane(lane, plan[0], plan[1], gateway)
+                if n:
+                    lane.round_sizes.append(n)
         # fold/escalate until no group has a conflict awaiting an answer
         pending = True
         while pending:
@@ -1019,6 +1252,7 @@ class JoinService:
                 for b, lane in enumerate(lanes):
                     for ans in answers.get(lane.req.rid, ()):
                         updates[b, ans.index] = ans.label
+                        lane.inflight_host[ans.index] = False
                         landed = True
                 if not landed:
                     continue  # nothing for this group this pass
@@ -1039,6 +1273,8 @@ class JoinService:
                             cents_per_assignment=lane.rate_cents,
                             budget_cents=lane.budget_cents)
                         lane.n_requeried += len(ticket.indices)
+                        if ticket.indices:
+                            lane.inflight_host[list(ticket.indices)] = True
                         pending |= bool(ticket.indices)
                         if exhausted:
                             exhausted_mask[b, exhausted] = True
@@ -1098,14 +1334,19 @@ class JoinService:
             idx = idx[np.argsort(-gains[idx], kind="stable")][:afford]
             frontier = np.zeros_like(frontier)
             frontier[idx] = True
-        lane.round_sizes.append(len(idx))
-        lane.crowdsourced[idx] = True
+        # cluster-task planning (DESIGN.md §15): harvested extras publish
+        # alongside the frontier so in-flight verdicts gate deduction
+        clusters, pair_idx = self._plan_tasks(lane, idx, gateway)
+        if clusters:
+            frontier = np.array(frontier)
+            for _, cov in clusters:
+                frontier[cov] = True
         engine_dispatches.add()  # frontier-mask upload
         lane.state = session_mark_published(lane.state, jnp.asarray(frontier))
-        gateway.post(lane.req.rid, lane.ordered, idx, lane.req.crowd,
-                     cents_per_assignment=lane.rate_cents)
-        lane.in_flight += len(idx)
-        return len(idx)
+        n = self._post_lane(lane, clusters, pair_idx, gateway)
+        lane.round_sizes.append(n)
+        lane.in_flight += n
+        return n
 
     def _sweep_lane(self, lane: _Lane) -> None:
         """Deduce everything the lane's evidence pins down (skipping pairs
@@ -1127,6 +1368,8 @@ class JoinService:
             budget_cents=lane.budget_cents)
         lane.n_requeried += len(ticket.indices)
         lane.in_flight += len(ticket.indices)
+        if ticket.indices:
+            lane.inflight_host[list(ticket.indices)] = True
         if exhausted:
             mask = np.zeros(lane.state.u.shape[0], bool)
             mask[exhausted] = True
@@ -1137,7 +1380,8 @@ class JoinService:
         """Event-driven serving (§5.2 lifted into the service): lanes fold
         answers as the gateway delivers them; a non-matching answer or a
         drained lane triggers deduce + re-frontier + post immediately."""
-        gateway = CrowdGateway(latency=self.latency, nf=self.nf)
+        gateway = CrowdGateway(latency=self.latency, nf=self.nf,
+                               aggregation=self.aggregation)
         active: List[_Lane] = []
         while self.queue or active or gateway.in_flight:
             refilled = False
@@ -1207,6 +1451,7 @@ class JoinService:
                 updates = np.full(p_cap, UNKNOWN, np.int32)
                 for ans in got:
                     updates[ans.index] = ans.label
+                    lane.inflight_host[ans.index] = False
                 lane.in_flight -= len(got)
                 engine_dispatches.add()  # updates upload
                 any_neg = any(ans.label != POS for ans in got)
@@ -1243,7 +1488,8 @@ class JoinService:
         (continuous batching).  Returns {rid: result} for everything served."""
         if self.async_mode:
             return self._run_async()
-        gateway = CrowdGateway(latency=self.latency, nf=self.nf)
+        gateway = CrowdGateway(latency=self.latency, nf=self.nf,
+                               aggregation=self.aggregation)
         active: List[_Lane] = []
         self._stacks.clear()  # drop any cache left by an aborted run
         self._prior_stacks.clear()

@@ -1,15 +1,24 @@
-"""Crowd simulators and the CrowdGateway transport (DESIGN.md §8).
+"""Crowd simulators and the CrowdGateway transport (DESIGN.md §8, §15).
 
 NoisyCrowd's empirical majority-vote error must match its analytic
 ``pair_error_rate``; the gateway must deliver every posted answer with a
 monotonic simulated clock, respect the worker pool, and steer
 non-matching-first when asked; and a NoisyCrowd end-to-end JoinService run
-must degrade quality in a bounded way, not collapse."""
+must degrade quality in a bounded way, not collapse.
+
+The §15 reliability model contracts: the streaming Dawid–Skene estimates
+must converge to the simulated per-worker error rates, EM aggregation must
+label no worse than majority at equal assignments, requeries must route to
+fresh workers (with exhaustion semantics unchanged), and cluster-task
+decoding must be conflict-screen-identical to submitting the same pairs
+individually."""
 import numpy as np
 import pytest
+from hypothesis import given, strategies as st
 
 from repro.core import (MATCH, NEG, POS, CrowdGateway, LatencyModel,
                         NoisyCrowd, PerfectCrowd)
+from repro.core.crowd import WorkerModel
 from repro.core.pairs import PairSet
 
 
@@ -120,3 +129,212 @@ def test_join_service_noisy_quality_degraded_but_bounded():
     assert q_noisy.f_measure >= 0.6, q_noisy
     assert res[rid_noisy].n_crowdsourced + res[rid_noisy].n_deduced \
         == len(ps)
+
+
+# ---------------------------------------------------------------------------
+# §15 WorkerModel: EM estimates converge to the simulated worker pool, and
+# EM aggregation labels no worse than majority at equal assignments.
+# ---------------------------------------------------------------------------
+def _random_truth_pairs(m: int, seed: int) -> PairSet:
+    rng = np.random.default_rng(seed)
+    u = np.arange(m, dtype=np.int32)
+    truth = rng.random(m) < 0.5
+    lik = np.linspace(0.9, 0.1, m).astype(np.float32)
+    return PairSet(u, u + m, lik, truth, n_objects=2 * m)
+
+
+def _pool_ballots(seed: int, m: int = 400):
+    """One heterogeneous pool labeling ``m`` pairs: returns the crowd, the
+    pairs, the fitted WorkerModel, and (em_correct, majority_correct)."""
+    crowd = NoisyCrowd(error_rate=0.2, n_assignments=3, qualification=False,
+                       seed=seed, n_workers=12, worker_concentration=3.0)
+    pairs = _random_truth_pairs(m, seed)
+    wm = WorkerModel()
+    em_ok = maj_ok = 0
+    for i in range(m):
+        ballot = crowd.ask_ballot(pairs, i)
+        truth = POS if pairs.truth[i] else NEG
+        em_ok += wm.record(ballot.votes, ballot.workers) == truth
+        maj_ok += (ballot.label == MATCH) == bool(pairs.truth[i])
+    wm.refit()
+    return crowd, pairs, wm, em_ok, maj_ok
+
+
+@pytest.mark.parametrize("seed", [5, 6, 7])
+def test_worker_model_estimates_converge_to_simulated_errors(seed):
+    """After a few hundred ballots + refit, the per-worker error estimates
+    must recover the NoisyCrowd's drawn worker_errors: small mean absolute
+    error and near-perfect worker ranking (the signal cluster routing and
+    weighted voting actually consume)."""
+    crowd, _, wm, _, _ = _pool_ballots(seed)
+    true_errs = crowd.worker_errors
+    est = np.array([wm.error_rate(w) for w in range(crowd.n_workers)])
+    # estimates clip at max_error=0.45, so near-coin-flip workers contribute
+    # an irreducible ~0.04; measured MAE is 0.03-0.05 across these seeds
+    assert np.abs(est - true_errs).mean() < 0.08, (true_errs, est)
+    rank_true = np.argsort(np.argsort(true_errs))
+    rank_est = np.argsort(np.argsort(est))
+    assert np.corrcoef(rank_true, rank_est)[0, 1] > 0.8
+    # the routing queries agree: best_workers leads with truly good workers
+    best = wm.best_workers(limit=3)
+    assert best and all(true_errs[w] < float(np.median(true_errs))
+                        for w in best)
+
+
+@pytest.mark.parametrize("seed", [5, 6, 7])
+def test_em_aggregation_no_worse_than_majority_equal_assignments(seed):
+    """Tentpole acceptance: on a heterogeneous pool, reliability-weighted
+    aggregation must label no worse than naive majority from the SAME
+    ballots (equal assignments, equal spend).  Measured margin is +12..+17
+    correct out of 400 on these seeds."""
+    _, _, _, em_ok, maj_ok = _pool_ballots(seed)
+    assert em_ok >= maj_ok, (em_ok, maj_ok)
+
+
+def test_worker_model_uninformed_reduces_to_majority():
+    """With no history every weight is equal, so aggregation must reduce to
+    the unweighted majority — EM can only start helping once it has
+    evidence, never hurt before."""
+    wm = WorkerModel()
+    assert wm.aggregate((POS, POS, NEG), (0, 1, 2)) == POS
+    assert wm.aggregate((NEG, NEG, POS), (3, 4, 5)) == NEG
+
+
+def test_worker_model_rejects_uninformative_prior():
+    with pytest.raises(ValueError, match="prior_error"):
+        WorkerModel(prior_error=0.5)
+
+
+# ---------------------------------------------------------------------------
+# §15 requery routing: escalations go to fresh workers; exhaustion keeps
+# the §9 semantics (max_requeries, then the graph outvotes).
+# ---------------------------------------------------------------------------
+def test_requery_routes_to_fresh_workers():
+    crowd = NoisyCrowd(error_rate=0.2, n_assignments=3, qualification=False,
+                       seed=3, n_workers=20)
+    pairs = _truth_pairs(2)
+    gw = CrowdGateway(aggregation="em")
+    gw.post(0, pairs, [0], crowd)
+    (first,) = gw.poll()
+    seen = set(gw.seen_workers(0, 0))
+    assert seen == set(first.workers) and len(seen) == 3
+    ticket, exhausted = gw.requery(0, pairs, [0], crowd)
+    assert ticket.indices == (0,) and exhausted == []
+    (second,) = gw.poll()
+    # 5 fresh workers: the pool has 17 unseen, so zero overlap is required
+    assert second.n_assignments == 5
+    assert not seen & set(second.workers), (seen, second.workers)
+    assert set(gw.seen_workers(0, 0)) == seen | set(second.workers)
+    # exhaustion semantics unchanged by worker routing: attempt 2 is past
+    # max_requeries=1, so the pair comes back exhausted, not re-posted
+    ticket2, exhausted2 = gw.requery(0, pairs, [0], crowd)
+    assert ticket2.indices == () and exhausted2 == [0]
+    assert gw.in_flight == 0
+
+
+def test_requery_small_pool_tops_up_without_deadlock():
+    """When fewer unseen workers remain than the escalated ballot needs,
+    seen workers top the ballot up — escalation must never deadlock on a
+    small pool."""
+    crowd = NoisyCrowd(error_rate=0.2, n_assignments=3, qualification=False,
+                       seed=4, n_workers=5)
+    pairs = _truth_pairs(1)
+    gw = CrowdGateway()
+    gw.post(0, pairs, [0], crowd)
+    (first,) = gw.poll()
+    gw.requery(0, pairs, [0], crowd)
+    (second,) = gw.poll()
+    assert second.n_assignments == 5  # full escalated ballot despite pool
+    # the 2 unseen workers must all serve before any repeat
+    unseen = set(range(5)) - set(first.workers)
+    assert unseen <= set(second.workers)
+
+
+# ---------------------------------------------------------------------------
+# §15 cluster tasks: decoding a cluster task must be conflict-screen
+# identical to submitting the same pairs individually.
+# ---------------------------------------------------------------------------
+def _cluster_vs_pairs_parity(seed: int) -> None:
+    """One random world, answered twice from identical truth: once as one
+    cluster task, once as individual pair posts.  Labels, conflict masks,
+    and gateway counters must agree (PerfectCrowd: both channels emit truth,
+    so the conflict screen sees the same consistent stream)."""
+    import itertools
+
+    import jax.numpy as jnp
+
+    from repro.core import (UNKNOWN, make_session_state,
+                            session_fold_answers)
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 12))
+    ent = rng.integers(0, 3, n)
+    all_e = list(itertools.combinations(range(n), 2))
+    m = int(rng.integers(3, min(20, len(all_e)) + 1))
+    sel = rng.permutation(len(all_e))[:m]
+    u = np.array([all_e[i][0] for i in sel], np.int32)
+    v = np.array([all_e[i][1] for i in sel], np.int32)
+    truth = ent[u] == ent[v]
+    pairs = PairSet(u, v, np.linspace(0.9, 0.1, m).astype(np.float32),
+                    truth, n_objects=n)
+
+    def fold(answers):
+        state = make_session_state(u, v, n)
+        upd = np.full(m, UNKNOWN, np.int32)
+        for a in answers:
+            upd[a.index] = a.label
+        state, _ = session_fold_answers(state, jnp.asarray(upd))
+        return (np.asarray(state.labels).copy(),
+                np.asarray(state.conflicts).copy())
+
+    gw_cluster = CrowdGateway()
+    gw_cluster.post_cluster(0, pairs, list(range(m)), PerfectCrowd(),
+                            cents=1.0, n_assignments=2)
+    cluster_answers = gw_cluster.poll()
+    gw_pairs = CrowdGateway()
+    gw_pairs.post(0, pairs, list(range(m)), PerfectCrowd())
+    pair_answers = gw_pairs.poll()
+
+    assert {a.index for a in cluster_answers} == set(range(m))
+    assert {(a.index, a.label) for a in cluster_answers} \
+        == {(a.index, a.label) for a in pair_answers}
+    labels_c, conflicts_c = fold(cluster_answers)
+    labels_p, conflicts_p = fold(pair_answers)
+    np.testing.assert_array_equal(labels_c, labels_p)
+    np.testing.assert_array_equal(conflicts_c, conflicts_p)
+    assert not conflicts_c.any()  # truth is transitive: nothing screened out
+    # gateway accounting: all m verdicts agreed, none escalated
+    assert gw_cluster.cluster_pairs(0) == m
+    assert gw_cluster.n_posted == gw_pairs.n_posted == m
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_cluster_decode_matches_individual_pairs(seed):
+    _cluster_vs_pairs_parity(seed)
+
+
+@given(st.integers(0, 10**6))
+def test_cluster_decode_matches_individual_pairs_property(seed):
+    _cluster_vs_pairs_parity(seed)
+
+
+def test_cluster_disagreement_escalates_to_pair_ballots():
+    """A wrong single-worker partition is coherent — only a second
+    assignment can catch it.  Disagreed verdicts must escalate to ordinary
+    pair ballots so every covered index is answered exactly once."""
+    crowd = NoisyCrowd(error_rate=0.35, n_assignments=3, qualification=False,
+                       seed=2, n_workers=20)
+    pairs = _truth_pairs(8)
+    gw = CrowdGateway()
+    gw.post_cluster(0, pairs, list(range(8)), crowd, cents=2.0,
+                    n_assignments=2, pair_cents_per_assignment=0.1)
+    answers = gw.drain()
+    assert {a.index for a in answers} == set(range(8))  # each answered once
+    agreed = [a for a in answers if a.n_assignments == 2]
+    escalated = [a for a in answers if a.n_assignments == 3]
+    assert len(agreed) + len(escalated) == 8
+    assert escalated, "0.35-error partitions never disagreed — dead test"
+    assert gw.cluster_pairs(0) == len(agreed)
+    # escalations billed at the pair rate; agreed pairs rode the task price
+    assert gw.spent_cents(0) == pytest.approx(2.0 + 0.3 * len(escalated))
+    assert gw.assignments_posted(0) == 2 + 3 * len(escalated)
