@@ -16,7 +16,12 @@ Stages, benchmarked separately:
 * ordering — the §10 adaptive-order stage: crowdsourced-pair counts for
   expected / adaptive / random through the serving path, per-round
   priority-refresh milliseconds, and a budget-capped session that must
-  stop on budget with consistent labels (also asserted in the CI smoke).
+  stop on budget with consistent labels (also asserted in the CI smoke);
+* recovery — the §16 durable-serving stage: kill the service right after
+  checkpoint k, restore from disk, finish; labels must match the
+  uninterrupted run byte for byte, and the recovered run re-spends only
+  the remainder — the crowd cents saved vs restart-from-scratch equal the
+  spend already committed at the kill point (CI-asserted).
 
 Besides the harness CSV rows, emits one ``# JSON`` line with the raw
 numbers for the perf trajectory.  Set ``BENCH_JOIN_TINY=1`` for a
@@ -527,6 +532,85 @@ def _bench_ordering(out: list, payload: dict) -> None:
     }
 
 
+def _bench_recovery(out: list, payload: dict) -> None:
+    """DESIGN.md §16: kill-at-checkpoint-k / restore / finish against an
+    uninterrupted run.  Measures restore wall time and the crowd cents the
+    recovery saves over restarting from scratch (= the spend already
+    committed to the platform at the kill point, which a restart would
+    have to pay a second time)."""
+    import shutil
+    import tempfile
+
+    from repro.core import NoisyCrowd
+    from repro.data.entities import make_session_pairsets
+    from repro.serve.join_service import JoinService, ServiceKilled
+
+    n_sessions = 2 if _tiny() else 4
+    pairsets = make_session_pairsets(n_sessions, seed=5, n_objects=(20, 30),
+                                     n_pairs=(60, 110))
+    crowds = lambda: [NoisyCrowd(error_rate=0.15, seed=40 + k)
+                      for k in range(n_sessions)]
+
+    base_svc = JoinService(lanes=2)
+    rids = [base_svc.submit(ps, c) for ps, c in zip(pairsets, crowds())]
+    t0 = time.perf_counter()
+    base = base_svc.run()
+    base_secs = time.perf_counter() - t0
+    restart_cents = sum(base[r].n_spent_cents for r in rids)
+
+    kill_after = 2
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_join_recovery_")
+    try:
+        svc = JoinService(lanes=2, checkpoint_dir=ckpt_dir)
+        for ps, c in zip(pairsets, crowds()):
+            svc.submit(ps, c)
+        svc._crash_after_checkpoints = kill_after
+        killed = False
+        try:
+            svc.run()
+        except ServiceKilled:
+            killed = True
+        t0 = time.perf_counter()
+        restored = JoinService.restore(ckpt_dir)
+        restore_secs = time.perf_counter() - t0
+        spent_at_kill = restored.last_recovery["spent_cents"]
+        t0 = time.perf_counter()
+        rec = restored.run()
+        finish_secs = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    labels_identical = killed and all(
+        (base[r].labels == rec[r].labels).all()
+        and (base[r].crowdsourced == rec[r].crowdsourced).all()
+        for r in rids)
+    total_rec = sum(rec[r].n_spent_cents for r in rids)
+    # what the recovered run actually re-spends after the kill; a restart
+    # from scratch would pay the full total again
+    recovery_cents = total_rec - spent_at_kill
+    payload["recovery"] = {
+        "sessions": n_sessions, "lanes": 2,
+        "kill_after_checkpoints": kill_after,
+        "labels_identical": labels_identical,
+        "restore_ms": restore_secs * 1e3,
+        "uninterrupted_secs": base_secs,
+        "finish_after_restore_secs": finish_secs,
+        "restart_cents": restart_cents,
+        "recovered_total_cents": total_rec,
+        "cents_spent_at_kill": spent_at_kill,
+        "recovery_cents": recovery_cents,
+        "cents_saved_vs_restart": spent_at_kill,
+        "saved_frac": spent_at_kill / max(restart_cents, 1e-9),
+    }
+    out.append(row(
+        f"join_service/recovery_{n_sessions}sessions", restore_secs * 1e6,
+        f"restore_ms={restore_secs * 1e3:.1f} "
+        f"identical={labels_identical} "
+        f"recovery_cents={recovery_cents:.0f} "
+        f"restart_cents={restart_cents:.0f} "
+        f"saved={spent_at_kill / max(restart_cents, 1e-9):.0%}"))
+
+
 def run() -> list:
     out: list = []
     payload: dict = {}
@@ -536,5 +620,6 @@ def run() -> list:
     _bench_async_gateway(out, payload)
     _bench_conflict_folding(out, payload)
     _bench_ordering(out, payload)
+    _bench_recovery(out, payload)
     out.append("# JSON " + json.dumps({"bench_join_service": payload}))
     return out

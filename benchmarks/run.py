@@ -39,6 +39,11 @@ def _trajectory(payloads: dict) -> dict:
             traj["fused_rounds_per_s"] = fused["rounds_per_s"]
             traj["fused_dispatches_per_round"] = fused["dispatches_per_round"]
             traj["fused_speedup_vs_per_lane"] = fused["speedup_vs_per_lane"]
+    if "recovery" in svc:  # §16 durable serving headline numbers
+        traj["recovery_restore_ms"] = svc["recovery"]["restore_ms"]
+        traj["recovery_cents_saved_frac"] = svc["recovery"]["saved_frac"]
+        traj["recovery_labels_identical"] = \
+            svc["recovery"]["labels_identical"]
     if "human" in svc:
         traj["crowd_cents_per_resolved_pair"] = \
             svc["human"]["cents_per_resolved_pair"]

@@ -237,7 +237,98 @@ class Crowd:
         self._worker_seq = start + k
         return tuple(range(start, start + k))
 
+    # -- persistence (DESIGN.md §16) ------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the crowd's mutable state.
 
+        Subclasses with more state (rng streams, worker pools) extend the
+        base dict; together with :func:`crowd_from_state` this is what lets
+        a restored service replay the exact same answer stream an
+        uninterrupted run would have seen.
+
+        Returns:
+            A dict of plain JSON types.
+        """
+        return {"n_asked": int(self.n_asked),
+                "worker_seq": int(getattr(self, "_worker_seq", 0))}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot in place.
+
+        Args:
+            state: dict produced by :meth:`state_dict`.
+        """
+        self.n_asked = int(state.get("n_asked", 0))
+        self._worker_seq = int(state.get("worker_seq", 0))
+
+
+_CROWD_CLASSES: Dict[str, type] = {}
+
+
+def register_crowd(cls: type) -> type:
+    """Register a :class:`Crowd` subclass for checkpoint restore.
+
+    The serving checkpoint stores crowds as ``{"class": name, "state":
+    state_dict()}``; restore looks the class up here.  Usable as a
+    decorator; the built-in crowds are pre-registered.
+
+    Args:
+        cls: the crowd class to register.
+
+    Returns:
+        ``cls`` unchanged.
+    """
+    _CROWD_CLASSES[cls.__name__] = cls
+    return cls
+
+
+def crowd_to_state(crowd: Crowd) -> dict:
+    """Serialize a crowd to ``{"class": ..., "state": ...}`` (JSON-able).
+
+    Args:
+        crowd: any registered :class:`Crowd`.
+
+    Returns:
+        A payload :func:`crowd_from_state` accepts.
+    """
+    return {"class": type(crowd).__name__, "state": crowd.state_dict()}
+
+
+def crowd_from_state(payload: dict) -> Crowd:
+    """Rebuild a crowd from :func:`crowd_to_state` output.
+
+    The instance is created without running ``__init__`` (constructors
+    consume rng draws / validate ctor-time arguments that the snapshot
+    already reflects) and then restored via ``load_state_dict``.
+
+    Args:
+        payload: ``{"class": name, "state": state_dict}``.
+
+    Returns:
+        A crowd whose future answers match the snapshotted instance's.
+    """
+    name = payload["class"]
+    cls = _CROWD_CLASSES.get(name)
+    if cls is None:
+        raise KeyError(
+            f"unknown crowd class {name!r} — register it with "
+            "repro.core.crowd.register_crowd before restoring")
+    crowd = cls.__new__(cls)
+    crowd.load_state_dict(payload["state"])
+    return crowd
+
+
+def _rng_to_state(rng: np.random.Generator) -> dict:
+    return rng.bit_generator.state
+
+
+def _rng_from_state(state: dict) -> np.random.Generator:
+    rng = np.random.default_rng()
+    rng.bit_generator.state = state
+    return rng
+
+
+@register_crowd
 class PerfectCrowd(Crowd):
     """Ground-truth oracle crowd — the §2.1 assumption.
 
@@ -280,6 +371,7 @@ class PerfectCrowd(Crowd):
                         ).astype(np.int32)
 
 
+@register_crowd
 class NoisyCrowd(Crowd):
     """§6.4 deployment model: majority vote over error-prone workers.
 
@@ -526,6 +618,44 @@ class NoisyCrowd(Crowd):
             for j in range(k + 1)
         )
 
+    def state_dict(self) -> dict:
+        """Snapshot including the rng stream and the frozen worker pool.
+
+        ``error_rate`` is stored *post*-qualification (the ctor already
+        applied the 0.7× screen) and ``worker_errors`` as drawn, so restore
+        reproduces the instance without replaying ctor-time rng draws.
+
+        Returns:
+            A dict of plain JSON types.
+        """
+        state = super().state_dict()
+        state.update(
+            error_rate=float(self.error_rate),
+            n_assignments=int(self.n_assignments),
+            n_workers=(None if self.n_workers is None
+                       else int(self.n_workers)),
+            worker_errors=(None if self.worker_errors is None
+                           else [float(e) for e in self.worker_errors]),
+            rng=_rng_to_state(self.rng),
+        )
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot in place.
+
+        Args:
+            state: dict produced by :meth:`state_dict`.
+        """
+        super().load_state_dict(state)
+        self.error_rate = float(state["error_rate"])
+        self.n_assignments = int(state["n_assignments"])
+        self.n_workers = (None if state["n_workers"] is None
+                          else int(state["n_workers"]))
+        we = state["worker_errors"]
+        self.worker_errors = (None if we is None
+                              else np.asarray(we, np.float64))
+        self.rng = _rng_from_state(state["rng"])
+
 
 def _require_odd(n_assignments: int) -> None:
     if n_assignments < 1 or n_assignments % 2 == 0:
@@ -726,6 +856,38 @@ class WorkerModel:
             (w for w, c in self._n.items() if c >= min_votes),
             key=lambda w: (self.error_rate(w), w))
         return ranked[:limit]
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot: prior config, soft counts, recorded ballots.
+
+        Returns:
+            A dict of plain JSON types (worker-id keys stringified).
+        """
+        return {
+            "prior_error": float(self.prior_error),
+            "strength": float(self.strength),
+            "min_error": float(self.min_error),
+            "max_error": float(self.max_error),
+            "n": {str(w): float(c) for w, c in self._n.items()},
+            "wrong": {str(w): float(c) for w, c in self._wrong.items()},
+            "ballots": [[list(map(int, votes)), list(map(int, workers))]
+                        for votes, workers in self._ballots],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot in place.
+
+        Args:
+            state: dict produced by :meth:`state_dict`.
+        """
+        self.prior_error = float(state["prior_error"])
+        self.strength = float(state["strength"])
+        self.min_error = float(state["min_error"])
+        self.max_error = float(state["max_error"])
+        self._n = {int(w): float(c) for w, c in state["n"].items()}
+        self._wrong = {int(w): float(c) for w, c in state["wrong"].items()}
+        self._ballots = [(tuple(votes), tuple(workers))
+                         for votes, workers in state["ballots"]]
 
 
 @dataclasses.dataclass
@@ -1287,3 +1449,107 @@ class CrowdGateway:
         while self.in_flight:
             out.extend(self.poll())
         return out
+
+    # -- persistence (DESIGN.md §16) ------------------------------------
+    @staticmethod
+    def _task_to_state(task: _Task) -> dict:
+        return {"rid": int(task.rid),
+                "likelihood": float(task.likelihood),
+                "answers": [[int(i), int(lab), list(map(int, votes)),
+                             list(map(int, workers))]
+                            for i, lab, votes, workers in task.answers]}
+
+    @staticmethod
+    def _task_from_state(d: dict) -> _Task:
+        return _Task(
+            rid=int(d["rid"]),
+            answers=[(int(i), int(lab), tuple(votes), tuple(workers))
+                     for i, lab, votes, workers in d["answers"]],
+            likelihood=float(d["likelihood"]))
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of everything the platform remembers.
+
+        Captures in-flight tasks (waiting + running, with their already-
+        drawn answers and completion times — the crowd was asked and billed
+        at post time, so these are paid-for tickets the restored service
+        must not buy again), per-request spend/assignment ledgers, requery
+        and seen-worker bookkeeping, disagreement counters, the simulated
+        clock, the worker-pick rng stream, and the §15 worker-reliability
+        model.
+
+        Returns:
+            A dict of plain JSON types.
+        """
+        return {
+            "now": float(self._now),
+            "seq": int(self._seq),
+            "next_tid": int(self._next_tid),
+            "rng": (None if self._rng is None else _rng_to_state(self._rng)),
+            "waiting": [self._task_to_state(t) for t in self._waiting],
+            "running": [[float(t), int(s), self._task_to_state(task)]
+                        for t, s, task in self._running],
+            "attempts": [[int(rid), int(i), int(n)]
+                         for (rid, i), n in sorted(self._attempts.items())],
+            "seen": [[int(rid), int(i), sorted(int(w) for w in ws)]
+                     for (rid, i), ws in sorted(self._seen.items())],
+            "counters": {
+                "n_posted": int(self.n_posted),
+                "n_answered": int(self.n_answered),
+                "n_requeried": int(self.n_requeried),
+                "n_votes": int(self.n_votes),
+                "n_minority_votes": int(self.n_minority_votes),
+                "n_cluster_tasks": int(self.n_cluster_tasks),
+                "n_cluster_pairs": int(self.n_cluster_pairs),
+            },
+            "cluster_pairs": {str(r): int(n)
+                              for r, n in self._cluster_pairs.items()},
+            "spent_cents": {str(r): float(c)
+                            for r, c in self._spent_cents.items()},
+            "assignments": {str(r): int(n)
+                            for r, n in self._assignments.items()},
+            "worker_model": (None if self.worker_model is None
+                             else self.worker_model.state_dict()),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot into a gateway built with
+        the same ``(latency, nf, aggregation)`` configuration.
+
+        In-flight tickets are re-materialised exactly as checkpointed —
+        waiting tasks back onto the platform queue, running tasks back onto
+        the completion heap with their original finish times — and the
+        worker pool's free count is recomputed, so the event stream (and
+        therefore every label and every billed cent) continues as if the
+        process had never died.
+
+        Args:
+            state: dict produced by :meth:`state_dict`.
+        """
+        self._now = float(state["now"])
+        self._seq = int(state["seq"])
+        self._next_tid = int(state["next_tid"])
+        if state["rng"] is not None:
+            self._rng = _rng_from_state(state["rng"])
+        self._waiting = [self._task_from_state(d) for d in state["waiting"]]
+        self._running = [(float(t), int(s), self._task_from_state(d))
+                         for t, s, d in state["running"]]
+        heapq.heapify(self._running)
+        if self.latency is not None:
+            self._free_workers = self.latency.n_workers - len(self._running)
+        self._attempts = {(int(rid), int(i)): int(n)
+                          for rid, i, n in state["attempts"]}
+        self._seen = {(int(rid), int(i)): set(ws)
+                      for rid, i, ws in state["seen"]}
+        for k, v in state["counters"].items():
+            setattr(self, k, int(v))
+        self._cluster_pairs = {int(r): int(n)
+                               for r, n in state["cluster_pairs"].items()}
+        self._spent_cents = {int(r): float(c)
+                             for r, c in state["spent_cents"].items()}
+        self._assignments = {int(r): int(n)
+                             for r, n in state["assignments"].items()}
+        if state["worker_model"] is not None:
+            if self.worker_model is None:
+                self.worker_model = WorkerModel()
+            self.worker_model.load_state_dict(state["worker_model"])

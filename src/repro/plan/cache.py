@@ -17,6 +17,7 @@ counted in ``n_neg_dropped``.
 from __future__ import annotations
 
 import json
+import os
 from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
@@ -123,9 +124,14 @@ class ClusterCache:
                          sorted(clusters.items())],
             "negs": sorted(list(e) for e in self._negs),
         }
-        with open(path, "w") as f:
+        # write-tmp-then-rename (same commit point as CheckpointManager):
+        # a crash mid-write leaves at most a stray .tmp next to an intact
+        # previous cache, never a truncated cache at ``path``
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
+        os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> "ClusterCache":

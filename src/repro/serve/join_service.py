@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -116,6 +117,11 @@ class JoinRequest:
     # Seeded pairs fold into the session at lane open WITHOUT being posted to
     # the gateway, so spend accounting never bills them.
     seed_labels: Optional[np.ndarray] = None
+    # admission-control provenance (DESIGN.md §16), set by the service:
+    # whether this request waited in the queue behind fully-occupied lanes,
+    # and whether its budget was clamped to the remaining global envelope
+    admission_deferred: bool = False
+    envelope_clamped: bool = False
 
 
 @dataclasses.dataclass
@@ -170,6 +176,11 @@ class JoinSessionResult:
     n_cluster_tasks: int = 0
     n_cluster_pairs: int = 0
     n_cluster_cents: float = 0.0
+    # admission-control provenance (DESIGN.md §16): the request queued
+    # behind fully-occupied lanes before opening, and/or its budget was
+    # clamped down to the remaining global spend envelope
+    admission_deferred: bool = False
+    envelope_clamped: bool = False
 
     @property
     def n_crowdsourced(self) -> int:
@@ -251,6 +262,38 @@ class _EmbeddingStream:
     next_id: int                   # first unassigned object id
 
 
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """Global admission envelope for new submissions (DESIGN.md §16).
+
+    ``max_pending`` caps the submit queue (the QPS envelope: lanes busy AND
+    the queue full means the service is saturated — further submits shed
+    with :class:`AdmissionError` instead of growing an unbounded backlog).
+    ``global_budget_cents`` is a service-wide crowd-spend envelope shared
+    by every session: each admitted request reserves its budget against it
+    (requests without a budget of their own are clamped to whatever
+    remains, reported via ``JoinSessionResult.envelope_clamped``), and a
+    submission the exhausted envelope cannot fund at all is shed.
+    """
+
+    max_pending: Optional[int] = None
+    global_budget_cents: Optional[float] = None
+
+
+class AdmissionError(RuntimeError):
+    """A submission was shed by the admission envelope (DESIGN.md §16):
+    the queue is at ``max_pending`` or the global crowd-budget envelope
+    has no cents left to reserve.  The request was NOT enqueued; retry
+    after sessions finish, or raise the envelope."""
+
+
+class ServiceKilled(RuntimeError):
+    """Injected mid-run crash (recovery tests and the kill/restore
+    benchmark stage): raised right after a checkpoint commits when
+    ``JoinService._crash_after_checkpoints`` is set, so a run dies at a
+    deterministic point with a restorable checkpoint on disk."""
+
+
 def _bucket(n: int, floor: int = 8) -> int:
     """Next power of two >= n (>= floor) — stable jit cache keys."""
     return next_pow2(n, floor)
@@ -318,7 +361,11 @@ class JoinService:
                  fused_rounds: bool = True,
                  aggregation: str = "majority",
                  cluster_tasks: bool = False, cluster_size: int = 8,
-                 cluster_assignments: int = 2):
+                 cluster_assignments: int = 2,
+                 admission: Optional[AdmissionPolicy] = None,
+                 cluster_cache=None, cache_path: Optional[str] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1, checkpoint_keep: int = 3):
         if conflict_policy not in ("drop", "requery"):
             raise ValueError(
                 f"conflict_policy must be 'drop' or 'requery', "
@@ -344,6 +391,10 @@ class JoinService:
             raise ValueError(
                 f"cluster_assignments must be positive, "
                 f"got {cluster_assignments}")
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be positive, got {checkpoint_every}"
+                " — a non-positive cadence would never checkpoint")
         self.lanes = lanes
         self.cost = cost or CostModel()
         self.latency = latency
@@ -383,6 +434,41 @@ class JoinService:
         self._stream_interleave: Dict[int, bool] = {}
         # incremental machine phase: cached embedding index per streaming rid
         self._streams: Dict[int, "_EmbeddingStream"] = {}
+        # admission control (DESIGN.md §16): queue/budget envelope + shed
+        # counter; the envelope tracks finalized spend plus the budgets
+        # reserved by admitted-but-unfinished requests
+        self.admission = admission
+        self.n_shed = 0
+        self._envelope_spent = 0.0
+        self._envelope_reserved = 0.0
+        # cross-query cluster cache wired into the service (DESIGN.md §14):
+        # submit_embeddings seeds new requests from it and deposits their
+        # verdicts back at finalize; with cache_path set the cache persists
+        # (atomically) after every deposit and reloads at construction
+        if cluster_cache is None and cache_path is not None:
+            from repro.plan.cache import ClusterCache
+            cluster_cache = (ClusterCache.load(cache_path)
+                             if os.path.exists(cache_path) else ClusterCache())
+        self.cluster_cache = cluster_cache
+        self.cache_path = cache_path
+        self._cache_fps: Dict[int, Tuple[List[str], List[str]]] = {}
+        # durable serving state (DESIGN.md §16): periodic checkpoints of
+        # lanes + gateway + ledgers through train/checkpoint.py; restore()
+        # rebuilds the service from the latest one.  _crash_after_checkpoints
+        # is the deterministic kill switch the recovery tests/bench use.
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.checkpoint_keep = checkpoint_keep
+        self._ckpt = None
+        if checkpoint_dir is not None:
+            from repro.train.checkpoint import CheckpointManager
+            self._ckpt = CheckpointManager(checkpoint_dir,
+                                           keep=checkpoint_keep)
+        self._ckpt_step = 0
+        self._ckpt_tick = 0
+        self._crash_after_checkpoints: Optional[int] = None
+        self._resume: Optional[Tuple[List[_Lane], CrowdGateway]] = None
+        self.last_recovery: Optional[dict] = None
 
     # -- request ingestion ---------------------------------------------------
     def _admit(self, req: JoinRequest) -> int:
@@ -393,7 +479,34 @@ class JoinService:
         service defaults, validates order and seed shape, screens rid
         collisions (an explicit rid colliding with a queued or served
         request is rejected — a silent overwrite would drop the earlier
-        result), and enqueues.  Returns the assigned rid."""
+        result), and enqueues.  Returns the assigned rid.
+
+        Admission control (DESIGN.md §16): with an :class:`AdmissionPolicy`
+        attached, a submit that finds the queue at ``max_pending`` or the
+        global budget envelope empty is *shed* — counted in ``n_shed`` and
+        raised as :class:`AdmissionError` without enqueueing anything.
+        Admitted requests reserve their budget against the envelope; a
+        request asking for more than remains (or for no cap at all) is
+        clamped to the remainder and reports ``envelope_clamped``."""
+        remaining = None
+        if self.admission is not None:
+            pol = self.admission
+            if pol.max_pending is not None and \
+                    len(self.queue) >= pol.max_pending:
+                self.n_shed += 1
+                raise AdmissionError(
+                    f"admission queue full ({len(self.queue)} >= "
+                    f"max_pending={pol.max_pending}) — request shed; retry "
+                    "after sessions finish")
+            if pol.global_budget_cents is not None:
+                remaining = (pol.global_budget_cents - self._envelope_spent
+                             - self._envelope_reserved)
+                if remaining <= 1e-9:
+                    self.n_shed += 1
+                    raise AdmissionError(
+                        "crowd-budget envelope exhausted "
+                        f"({pol.global_budget_cents:.2f} cents committed) — "
+                        "request shed")
         req.order = validate_order(self.order if req.order is None
                                    else req.order)
         if req.crowd is None:
@@ -417,6 +530,11 @@ class JoinService:
                 f"{'served' if req.rid in self.results else 'queued'} — "
                 "pick a fresh rid (or omit it for an auto-assigned one)")
         self._next_rid = max(self._next_rid, req.rid) + 1
+        if remaining is not None:
+            if req.budget_cents is None or req.budget_cents > remaining:
+                req.budget_cents = remaining
+                req.envelope_clamped = True
+            self._envelope_reserved += req.budget_cents
         self.queue.append(req)
         return req.rid
 
@@ -525,10 +643,27 @@ class JoinService:
             truth=truth,
             n_objects=n_a + n_b,
         )
+        seed_labels = None
+        fps = None
+        if self.cluster_cache is not None:
+            # auto seed/deposit wiring (DESIGN.md §14/§16): fingerprint the
+            # candidate rows, warm-start from cached cross-query verdicts,
+            # and remember the fingerprints so _finalize can deposit this
+            # request's verdicts back.  An all-UNKNOWN seed is harmless —
+            # lane open skips the seed fold when nothing is known.
+            from repro.plan.algebra import row_fingerprints
+            fa = row_fingerprints(np.asarray(emb_a))
+            fb = row_fingerprints(np.asarray(emb_b))
+            fps = ([fa[int(i)] for i in np.asarray(cand.rows)],
+                   [fb[int(j)] for j in np.asarray(cand.cols)])
+            seed_labels = self.cluster_cache.seed(fps[0], fps[1])
         rid = self._admit(JoinRequest(
             None, pairs, crowd, order, total_true_matches,
             budget_cents=budget_cents,
-            cost_per_assignment=cost_per_assignment))
+            cost_per_assignment=cost_per_assignment,
+            seed_labels=seed_labels))
+        if fps is not None:
+            self._cache_fps[rid] = fps
         if streaming:
             self._streams[rid] = _EmbeddingStream(
                 index=index, truth_fn=truth_fn,
@@ -798,7 +933,7 @@ class JoinService:
                 ttm = int(req.pairs.truth.sum())
             q = quality(req.pairs, labels, ttm)
         n_crowd = int(crowdsourced.sum())
-        self.results[req.rid] = JoinSessionResult(
+        self.results[req.rid] = res = JoinSessionResult(
             rid=req.rid,
             labels=labels,
             crowdsourced=crowdsourced,
@@ -818,7 +953,29 @@ class JoinService:
             n_cluster_tasks=lane.n_cluster_tasks,
             n_cluster_pairs=gateway.cluster_pairs(req.rid) if gateway else 0,
             n_cluster_cents=lane.n_cluster_cents,
+            admission_deferred=req.admission_deferred,
+            envelope_clamped=req.envelope_clamped,
         )
+        # cross-query deposit (DESIGN.md §14/§16): hand the finished
+        # session's verdicts to the cluster cache under the fingerprints
+        # recorded at submit, then persist atomically.  UNKNOWN verdicts
+        # (budget-stopped pairs) deposit nothing; pairs appended after
+        # submit have no fingerprints and are sliced off.
+        fps = self._cache_fps.pop(req.rid, None)
+        if fps is not None and self.cluster_cache is not None:
+            verdicts = np.full(P, UNKNOWN, np.int32)
+            verdicts[lane.perm] = lane.labels_host
+            self.cluster_cache.deposit(fps[0], fps[1],
+                                       verdicts[: len(fps[0])])
+            if self.cache_path is not None:
+                self.cluster_cache.save(self.cache_path)
+        # admission envelope (DESIGN.md §16): the reservation made at admit
+        # converts into realized spend — the difference returns to the pool
+        if self.admission is not None and \
+                self.admission.global_budget_cents is not None:
+            self._envelope_reserved = max(
+                0.0, self._envelope_reserved - (req.budget_cents or 0.0))
+            self._envelope_spent += res.n_spent_cents
         self._streams.pop(req.rid, None)
         self._stream_interleave.pop(req.rid, None)
 
@@ -1380,15 +1537,16 @@ class JoinService:
         """Event-driven serving (§5.2 lifted into the service): lanes fold
         answers as the gateway delivers them; a non-matching answer or a
         drained lane triggers deduce + re-frontier + post immediately."""
-        gateway = CrowdGateway(latency=self.latency, nf=self.nf,
-                               aggregation=self.aggregation)
-        active: List[_Lane] = []
+        gateway, active = self._resume_run_state()
         while self.queue or active or gateway.in_flight:
+            self._checkpoint_tick(active, gateway)
             refilled = False
             while self.queue and len(active) < self.lanes:
                 lane = self._open_lane(self.queue.popleft())
                 active.append(lane)
                 refilled = True
+            for r in self.queue:  # still queued behind fully-occupied lanes
+                r.admission_deferred = True
             if any(self._pending_arrivals.get(l.req.rid) for l in active):
                 # arrivals are ingested before a fresh lane's first publish
                 # (up-front streams) and once per event-loop pass for
@@ -1482,20 +1640,83 @@ class JoinService:
             active = self._retire_done(active, gateway)
         return dict(self.results)
 
+    # -- durable serving state (DESIGN.md §16) -------------------------------
+    def _resume_run_state(self) -> Tuple[CrowdGateway, List[_Lane]]:
+        """The run loop's starting state: a fresh gateway and empty lane set
+        normally, or the lanes + gateway rebuilt by :meth:`restore` — the
+        resumed run picks up mid-wave with tickets still in flight."""
+        if self._resume is not None:
+            active, gateway = self._resume
+            self._resume = None
+            return gateway, list(active)
+        return CrowdGateway(latency=self.latency, nf=self.nf,
+                            aggregation=self.aggregation), []
+
+    def _checkpoint_tick(self, active: List[_Lane],
+                         gateway: CrowdGateway) -> None:
+        """Cadenced checkpoint hook at the top of every run-loop pass:
+        every ``checkpoint_every``-th pass commits a checkpoint (the first
+        pass always does, so even a run killed in its first wave restores
+        to an admitted queue instead of nothing)."""
+        if self._ckpt is None:
+            return
+        tick = self._ckpt_tick
+        self._ckpt_tick += 1
+        if tick % self.checkpoint_every:
+            return
+        self._checkpoint_now(active, gateway)
+
+    def _checkpoint_now(self, active: List[_Lane],
+                        gateway: CrowdGateway) -> None:
+        """Commit one checkpoint of the full serving state — lanes (device
+        states pulled to host), queue, results, arrival epochs, gateway
+        tickets/ledgers, envelope counters — through the atomic
+        ``CheckpointManager`` path.  Group stacks are flushed first so lane
+        states are authoritative; flushing is a pure writeback, so the
+        capture never perturbs the run's semantics."""
+        from repro.serve import recovery
+        self._flush_stacks()
+        tree, side = recovery.capture_service(self, active, gateway)
+        self._ckpt.save(self._ckpt_step, tree, sidecar=side)
+        self._ckpt_step += 1
+        if self._crash_after_checkpoints is not None and \
+                self._ckpt_step >= self._crash_after_checkpoints:
+            raise ServiceKilled(
+                f"injected crash after checkpoint {self._ckpt_step - 1} "
+                f"(step dir committed under {self.checkpoint_dir})")
+
+    @classmethod
+    def restore(cls, checkpoint_dir: str,
+                step: Optional[int] = None,
+                cluster_cache=None) -> "JoinService":
+        """Rebuild a service from the latest (or given) checkpoint under
+        ``checkpoint_dir`` (DESIGN.md §16): configuration, queued and
+        in-progress requests, finished results, spend ledgers, and the
+        gateway's in-flight tickets all come back; calling :meth:`run` on
+        the restored service resumes mid-wave and produces labels identical
+        to an uninterrupted run — without re-billing any answered pair.
+        ``cluster_cache`` overrides the cache handle (by default the saved
+        ``cache_path`` is reloaded).  ``service.last_recovery`` reports
+        what was recovered."""
+        from repro.serve import recovery
+        return recovery.restore_service(cls, checkpoint_dir, step=step,
+                                        cluster_cache=cluster_cache)
+
     # -- entry point ---------------------------------------------------------
     def run(self) -> Dict[int, JoinSessionResult]:
         """Drain the queue: lanes are refilled the moment a session finishes
         (continuous batching).  Returns {rid: result} for everything served."""
         if self.async_mode:
             return self._run_async()
-        gateway = CrowdGateway(latency=self.latency, nf=self.nf,
-                               aggregation=self.aggregation)
-        active: List[_Lane] = []
+        gateway, active = self._resume_run_state()
         self._stacks.clear()  # drop any cache left by an aborted run
         self._prior_stacks.clear()
         while self.queue or active:
+            self._checkpoint_tick(active, gateway)
             while self.queue and len(active) < self.lanes:
                 active.append(self._open_lane(self.queue.popleft()))
+            for r in self.queue:  # still queued behind fully-occupied lanes
+                r.admission_deferred = True
             if any(self._pending_arrivals.get(l.req.rid) for l in active):
                 # arrival epochs land before the round's frontier: lane
                 # states must be authoritative (not cached in a group

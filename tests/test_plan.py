@@ -425,3 +425,71 @@ def test_join_reorder_result_equivalent(make_random_world, seed):
             base = sig
         else:
             assert sig == base
+
+
+# ---------------------------------------------------------------------------
+# durable serving state (DESIGN.md §16): atomic cache persistence + the
+# service-level auto seed/deposit wiring
+# ---------------------------------------------------------------------------
+def test_cluster_cache_save_atomic_on_crash(tmp_path, monkeypatch):
+    """Regression: ``save`` used to open the destination directly, so a
+    crash mid-write truncated the only copy.  Now it writes ``path.tmp``
+    and renames — a crash mid-write leaves the previous cache intact."""
+    import repro.plan.cache as cache_mod
+    real_dump = cache_mod.json.dump
+    path = str(tmp_path / "cache.json")
+    cache = ClusterCache()
+    cache.deposit(["a", "b"], ["b", "c"], np.array([POS, POS], np.int32))
+    cache.save(path)
+
+    def crash_mid_write(payload, f, **kw):
+        f.write('{"clusters": [["a", ')  # partial bytes, then the plug pulls
+        raise OSError("power loss (injected)")
+
+    monkeypatch.setattr(cache_mod.json, "dump", crash_mid_write)
+    cache.deposit(["c"], ["d"], np.array([POS], np.int32))
+    with pytest.raises(OSError, match="power loss"):
+        cache.save(path)
+    monkeypatch.setattr(cache_mod.json, "dump", real_dump)
+    # the destination was never touched: the pre-crash cache still loads
+    loaded = ClusterCache.load(path)
+    np.testing.assert_array_equal(loaded.seed(["a"], ["c"]), [POS])
+    assert loaded.n_objects == 3  # "d" never landed
+    # and a clean save commits the new state over it
+    cache.save(path)
+    assert ClusterCache.load(path).n_objects == 4
+
+
+def test_service_cache_path_auto_seed_deposit(tmp_path):
+    """ROADMAP item 3: a service built with ``cache_path`` fingerprints
+    ``submit_embeddings`` candidates, deposits the finished verdicts, and
+    persists — a second service over the same objects warm-starts fully
+    (zero crowdsourced pairs) with identical labels."""
+    import os
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(2, 8)).astype(np.float32)
+    emb = base[np.arange(16) % 2] + \
+        0.05 * rng.normal(size=(16, 8)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    emb_a, emb_b = jnp.asarray(emb[:8]), jnp.asarray(emb[8:])
+    truth_fn = lambda rows, cols: \
+        (np.asarray(rows) % 2) == (np.asarray(cols) % 2)
+    path = str(tmp_path / "cache.json")
+
+    def serve():
+        svc = JoinService(lanes=1, cache_path=path)
+        rid = svc.submit_embeddings(emb_a, emb_b, threshold=0.3, mesh=mesh,
+                                    truth_fn=truth_fn)
+        return svc.run()[rid]
+
+    first = serve()
+    assert os.path.exists(path), "deposit must persist the cache"
+    assert first.n_cache_hits == 0 and first.n_crowdsourced > 0
+    second = serve()
+    np.testing.assert_array_equal(first.labels, second.labels)
+    assert second.n_crowdsourced == 0
+    assert second.n_cache_hits == len(second.labels)
+    assert second.n_spent_cents == 0.0

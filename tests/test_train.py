@@ -187,3 +187,133 @@ def test_elastic_reshard_across_meshes(tmp_path):
                        capture_output=True, text=True, cwd=str(Path(__file__).parent.parent),
                        timeout=600)
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+# -- durable-state fixes (DESIGN.md §16) -------------------------------------
+def test_background_save_failure_surfaces(tmp_path, monkeypatch):
+    """A failed background write is never silent: the exception is captured
+    in the writer thread and re-raised from wait() (and would equally
+    surface from the next save/restore, which call wait() first)."""
+    import repro.train.checkpoint as ckpt_mod
+    cm = CheckpointManager(tmp_path, keep=2)
+
+    def boom(*a, **k):
+        raise OSError("disk full (injected)")
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", boom)
+    cm.save(1, {"x": jnp.ones(3)}, background=True)
+    with pytest.raises(RuntimeError, match="background checkpoint save"):
+        cm.wait()
+    # the error is consumed: the manager stays usable once the cause clears
+    monkeypatch.undo()
+    cm.save(2, {"x": jnp.ones(3)}, background=True)
+    cm.wait()
+    assert cm.latest_step() == 2
+
+
+def test_crash_at_commit_preserves_previous_checkpoint(tmp_path, monkeypatch):
+    """Regression: re-saving an existing step used to rmtree the old dir
+    before renaming the new one in — a crash in that window destroyed the
+    only copy.  Now the old dir is parked at ``.old`` first, so a crash at
+    the commit rename still leaves a restorable checkpoint."""
+    import repro.train.checkpoint as ckpt_mod
+    cm = CheckpointManager(tmp_path, keep=2)
+    cm.save(5, {"x": jnp.full(3, 1.0)})
+
+    real_rename = os.rename
+
+    def crash_at_commit(src, dst):
+        if str(src).endswith(".tmp"):
+            raise OSError("killed at commit (injected)")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(ckpt_mod.os, "rename", crash_at_commit)
+    with pytest.raises(OSError, match="killed at commit"):
+        cm.save(5, {"x": jnp.full(3, 2.0)})
+    monkeypatch.undo()
+    # the parked copy still restores with the ORIGINAL contents
+    assert cm.all_steps() == [5]
+    step, state, _ = cm.restore()
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.full(3, 1.0))
+    # and a clean re-save replaces it
+    cm.save(5, {"x": jnp.full(3, 3.0)})
+    _, state, _ = cm.restore()
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.full(3, 3.0))
+    assert not (tmp_path / "step_00000005.old").exists()
+
+
+def test_restore_ignores_leftover_tmp(tmp_path):
+    """A crash mid-write leaves a ``.tmp`` dir: it must be invisible to
+    all_steps/restore, and a later save of the same step must clobber it."""
+    cm = CheckpointManager(tmp_path, keep=3)
+    cm.save(1, {"x": jnp.ones(2)})
+    stray = tmp_path / "step_00000002.tmp"
+    stray.mkdir()
+    (stray / "arrays.npz").write_bytes(b"truncated")
+    assert cm.all_steps() == [1]
+    assert cm.latest_step() == 1
+    cm.save(2, {"x": jnp.full(2, 2.0)})
+    assert cm.all_steps() == [1, 2]
+    _, state, _ = cm.restore(2)
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.full(2, 2.0))
+
+
+def test_checkpoint_bfloat16_roundtrip(tmp_path):
+    """bfloat16 leaves round-trip bit-exact through the uint16 view (npz
+    cannot store ml_dtypes directly)."""
+    import ml_dtypes
+    x = jnp.asarray(np.linspace(-3, 3, 16), dtype=jnp.bfloat16)
+    cm = CheckpointManager(tmp_path)
+    cm.save(0, {"x": x, "y": jnp.ones(4, jnp.float32)})
+    _, state, _ = cm.restore()
+    assert state["x"].dtype == np.dtype(ml_dtypes.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(x).view(np.uint16), state["x"].view(np.uint16))
+    assert state["y"].dtype == np.float32
+
+
+def test_gc_spares_latest_during_background_save(tmp_path):
+    """keep=1 with an in-flight background save: the previous (latest
+    restorable) step survives until the new one commits — GC runs after
+    the commit rename, never before."""
+    import threading
+    import repro.train.checkpoint as ckpt_mod
+    cm = CheckpointManager(tmp_path, keep=1)
+    cm.save(1, {"x": jnp.ones(2)})
+    gate = threading.Event()
+    real_savez = np.savez
+
+    def slow_savez(path, **arrays):
+        gate.wait(timeout=30)
+        return real_savez(path, **arrays)
+
+    ckpt_mod.np.savez = slow_savez
+    try:
+        cm.save(2, {"x": jnp.full(2, 2.0)}, background=True)
+        # writer blocked pre-commit: step 1 must still be restorable
+        assert cm.all_steps() == [1]
+    finally:
+        gate.set()
+        cm.wait()
+        ckpt_mod.np.savez = real_savez
+    assert cm.all_steps() == [2]
+
+
+def test_checkpoint_dataclass_statics_roundtrip(tmp_path):
+    """Registered-dataclass subtrees (the serve layer's SessionState):
+    array fields ride the npz, static scalar fields ride the manifest, and
+    restore rebuilds the instance without any caller-side registration."""
+    from repro.core.jax_graph import SessionState, make_session_state
+    state = make_session_state(
+        np.array([0, 1], np.int32), np.array([1, 2], np.int32), 3,
+        pair_capacity=8, object_capacity=8)
+    cm = CheckpointManager(tmp_path)
+    cm.save(0, {"session": state, "extra": jnp.ones(2)})
+    _, restored, _ = cm.restore()
+    got = restored["session"]
+    assert isinstance(got, SessionState)
+    assert got.n_objects == state.n_objects
+    for f in ("u", "v", "labels", "published", "roots", "neg_keys",
+              "rounds", "conflicts", "priority"):
+        np.testing.assert_array_equal(np.asarray(getattr(state, f)),
+                                      np.asarray(getattr(got, f)))
